@@ -1,0 +1,71 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Builds the paper's iris setup (16 clauses, T=15, s=1.375 offline / 1.0
+online, 10 offline epochs, sets 30/60/60, offline limited to 20 rows) and
+runs all cross-validation orderings as ONE vmapped program.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.tm_iris import CONFIG as TM_SYS
+from repro.core import init_runtime, init_state
+from repro.core import manager as mgr
+from repro.data import blocks
+
+CFG = TM_SYS.tm
+
+
+def build_sets(n_orderings: int, offline_limit: int | None = 20):
+    """Stacked per-ordering Sets + keys (leading axis = ordering)."""
+    osets, _spec = blocks.iris_paper_sets(n_orderings=n_orderings)
+    O, n_off = osets.offline_y.shape
+    train_valid = np.ones((O, n_off), dtype=bool)
+    if offline_limit is not None:
+        train_valid[:, offline_limit:] = False  # §5.1: train on 20 of 30
+    sets = mgr.Sets(
+        offline_x=jnp.asarray(osets.offline_x),
+        offline_y=jnp.asarray(osets.offline_y),
+        offline_valid=jnp.ones((O, n_off), dtype=bool),  # analyze all 30
+        validation_x=jnp.asarray(osets.validation_x),
+        validation_y=jnp.asarray(osets.validation_y),
+        validation_valid=jnp.ones(osets.validation_y.shape, dtype=bool),
+        online_x=jnp.asarray(osets.online_x),
+        online_y=jnp.asarray(osets.online_y),
+        online_valid=jnp.ones(osets.online_y.shape, dtype=bool),
+        offline_train_valid=jnp.asarray(train_valid),
+    )
+    return sets, O
+
+
+def run_schedule(schedule, *, n_orderings=24, n_cycles=16,
+                 offline_limit: int | None = 20, seed=0):
+    """Mean accuracy curves [1+n_cycles, 3] over orderings + wall time."""
+    sets, O = build_sets(n_orderings, offline_limit)
+    sys_cfg = mgr.SystemConfig(
+        n_offline_epochs=TM_SYS.n_offline_epochs, n_online_cycles=n_cycles
+    )
+    rt = init_runtime(CFG, s=TM_SYS.s_offline, T=TM_SYS.T)
+    states = jax.vmap(lambda _: init_state(CFG))(jnp.arange(O))
+    keys = jax.random.split(jax.random.PRNGKey(seed), O)
+
+    t0 = time.time()
+    _, accs, activity = mgr.run_orderings(
+        CFG, sys_cfg, states, rt, sets, schedule, keys
+    )
+    accs = np.asarray(accs)          # [O, 1+n_cycles, 3]
+    activity = np.asarray(activity)  # [O, n_cycles]
+    wall = time.time() - t0
+    return accs.mean(axis=0), activity.mean(axis=0), wall, O
+
+
+def curve_csv(name: str, curve: np.ndarray) -> str:
+    """accuracy curve -> csv rows `name,cycle,offline,validation,online`."""
+    rows = []
+    for i, (a, b, c) in enumerate(curve):
+        rows.append(f"{name},{i},{a:.4f},{b:.4f},{c:.4f}")
+    return "\n".join(rows)

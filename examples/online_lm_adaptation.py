@@ -1,0 +1,60 @@
+"""The paper's Fig-3 FSM applied to an LM (DESIGN.md §4):
+
+offline train -> analyze -> interleave online updates with periodic
+analysis; if eval loss collapses (bad online data / faults), roll back to
+the last good checkpoint — the TM architecture's accuracy-watchdog +
+on-chip-retrain policy (§5.3.2) as an LM serving runtime.
+
+    PYTHONPATH=src python examples/online_lm_adaptation.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.data import synthetic
+from repro.models import params as P
+from repro.models import transformer
+from repro.serve.online_adapt import OnlineAdaptConfig, OnlineAdaptManager
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+
+
+def main():
+    cfg = configs.get_smoke_config("gemma3_1b")
+    prm = P.materialize(transformer.model_specs(cfg), jax.random.PRNGKey(0),
+                        jnp.float32)
+    tc = ts_mod.TrainConfig(opt=opt_mod.OptConfig(
+        lr=2e-3, warmup_steps=2, total_steps=500))
+    state = ts_mod.init_state(tc, prm)
+    oc = OnlineAdaptConfig(analyze_every=4, rollback_threshold=0.10,
+                           checkpoint_dir="/tmp/repro_online_lm")
+    m = OnlineAdaptManager(cfg, tc, state, oc)
+
+    shape = ShapeConfig("ex", 64, 2, "train")
+    stream = synthetic.token_batches(cfg, shape, seed=0)
+    evalb = synthetic.token_batches(cfg, shape, seed=99).__next__()
+
+    base = m.offline_train([next(stream) for _ in range(8)], evalb)
+    print(f"offline phase: eval loss {base:.3f}")
+
+    for step in range(24):
+        batch = next(stream)
+        if 8 <= step < 12:  # a burst of corrupted online labels
+            batch = dict(batch)
+            batch["tokens"] = jnp.asarray(
+                np.random.default_rng(step).integers(
+                    0, cfg.vocab_size, batch["tokens"].shape), jnp.int32)
+        loss = m.online_step(batch, evalb)
+        if loss is not None:
+            print(f"online step {step:2d}: eval={loss:.3f} "
+                  f"rollbacks={m.rollbacks}")
+    print(f"\nfinal eval {m.history[-1][1]:.3f} (offline {base:.3f}); "
+          f"rollbacks={m.rollbacks}")
+
+
+if __name__ == "__main__":
+    main()

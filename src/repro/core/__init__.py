@@ -1,0 +1,25 @@
+"""The paper's primary contribution: TM online-learning system in JAX.
+
+Public surface:
+  TMConfig / TMState / TMRuntime      — design-time / learnt / runtime state
+  init_state / init_runtime           — constructors
+  forward / predict / predict_batch   — inference datapath
+  train_step / train_datapoints / train_epochs — learning datapath
+  faults, accuracy, manager, online, hpsearch   — management subsystems
+"""
+from repro.core.tm import (  # noqa: F401
+    TMConfig,
+    TMRuntime,
+    TMState,
+    forward,
+    init_runtime,
+    init_state,
+    predict,
+    predict_batch,
+)
+from repro.core.feedback import (  # noqa: F401
+    StepAux,
+    train_datapoints,
+    train_epochs,
+    train_step,
+)

@@ -1,0 +1,62 @@
+"""Accuracy-analysis block + history RAM (paper §3.3).
+
+``analyze`` is the paper's error-counting pass over a data set (masked rows
+excluded, so class-filtered / partially-used sets keep fixed shapes);
+``History`` is the preallocated on-device record of per-cycle accuracies that
+the FPGA keeps in RAM during simulation and offloads to the microcontroller
+on hardware.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tm as tm_mod
+from repro.core.tm import TMConfig, TMRuntime, TMState
+
+
+def analyze(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    xs: jax.Array,      # [n, f] bool
+    ys: jax.Array,      # [n] int32
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """Accuracy over the valid rows of a set. Scalar f32 in [0, 1]."""
+    preds = jax.vmap(lambda x: tm_mod.predict(cfg, state, rt, x))(xs)
+    ok = (preds == ys).astype(jnp.float32)
+    if valid is None:
+        return jnp.mean(ok)
+    v = valid.astype(jnp.float32)
+    return jnp.sum(ok * v) / jnp.maximum(jnp.sum(v), 1.0)
+
+
+class History(NamedTuple):
+    """Fixed-capacity accuracy history (the paper's history RAM)."""
+
+    values: jax.Array  # [capacity, n_sets] f32
+    idx: jax.Array     # scalar int32 — next write slot
+
+
+def make_history(capacity: int, n_sets: int) -> History:
+    return History(
+        values=jnp.full((capacity, n_sets), jnp.nan, dtype=jnp.float32),
+        idx=jnp.int32(0),
+    )
+
+
+def record(hist: History, row: jax.Array) -> History:
+    """Append one accuracy row (no-op when full, like a saturating RAM)."""
+    cap = hist.values.shape[0]
+    full = hist.idx >= cap
+    slot = jnp.minimum(hist.idx, cap - 1)
+    new_vals = jax.lax.dynamic_update_slice(
+        hist.values, row[None].astype(jnp.float32), (slot, 0)
+    )
+    return History(
+        values=jnp.where(full, hist.values, new_vals),
+        idx=jnp.where(full, hist.idx, hist.idx + 1),
+    )

@@ -1,0 +1,83 @@
+"""Fault controller (paper §3.1.2, §5.3).
+
+Stuck-at faults are injected by forcing TA action outputs through AND/OR
+masks: ``action' = (action & and_mask) | or_mask``. Fault-free operation is
+and=1 / or=0. The masks live in :class:`~repro.core.tm.TMRuntime`, are
+addressable per-TA, and can be rewritten at runtime without recompilation —
+exactly the paper's microcontroller-programmable fault mappings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tm import TMConfig, TMRuntime
+
+
+def fault_free_masks(cfg: TMConfig) -> tuple[jax.Array, jax.Array]:
+    shape = (cfg.max_classes, cfg.max_clauses, cfg.n_literals)
+    return jnp.ones(shape, dtype=bool), jnp.zeros(shape, dtype=bool)
+
+
+def even_spread_stuck_at(
+    cfg: TMConfig,
+    fraction: float,
+    stuck_value: int,
+    *,
+    offset: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Evenly-spread stuck-at faults over the flattened TA bank.
+
+    Mirrors the paper's Python script: "an equal spread of fault mappings
+    across the TAs" (§5.3.1) — every k-th TA is faulted, k = 1/fraction.
+
+    Returns (and_mask, or_mask) as numpy bool arrays.
+    """
+    shape = (cfg.max_classes, cfg.max_clauses, cfg.n_literals)
+    total = int(np.prod(shape))
+    n_faults = int(round(total * fraction))
+    and_mask = np.ones(total, dtype=bool)
+    or_mask = np.zeros(total, dtype=bool)
+    if n_faults > 0:
+        idx = (np.floor(np.arange(n_faults) * (total / n_faults)).astype(np.int64)
+               + offset) % total
+        if stuck_value == 0:
+            and_mask[idx] = False   # ANDed signal 0 => output always 0
+        else:
+            or_mask[idx] = True     # ORed signal 1 => output always 1
+    return and_mask.reshape(shape), or_mask.reshape(shape)
+
+
+def random_stuck_at(
+    cfg: TMConfig,
+    fraction: float,
+    stuck_value: int,
+    seed: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Uniform-random stuck-at faults (without replacement)."""
+    shape = (cfg.max_classes, cfg.max_clauses, cfg.n_literals)
+    total = int(np.prod(shape))
+    n_faults = int(round(total * fraction))
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(total, size=n_faults, replace=False)
+    and_mask = np.ones(total, dtype=bool)
+    or_mask = np.zeros(total, dtype=bool)
+    if stuck_value == 0:
+        and_mask[idx] = False
+    else:
+        or_mask[idx] = True
+    return and_mask.reshape(shape), or_mask.reshape(shape)
+
+
+def inject(rt: TMRuntime, and_mask, or_mask) -> TMRuntime:
+    """Write new fault mappings into the runtime (microcontroller write)."""
+    return rt._replace(
+        ta_and_mask=jnp.asarray(and_mask, dtype=bool),
+        ta_or_mask=jnp.asarray(or_mask, dtype=bool),
+    )
+
+
+def clear(cfg: TMConfig, rt: TMRuntime) -> TMRuntime:
+    a, o = fault_free_masks(cfg)
+    return rt._replace(ta_and_mask=a, ta_or_mask=o)

@@ -1,0 +1,197 @@
+"""TM learning: feedback selection + TA updates (paper §2, §4).
+
+The FPGA applies inference *and* feedback for all clauses/TAs of a datapoint in
+two clock cycles; here the same plane of work is a single fused vectorized
+update, and datapoints stream through ``lax.scan`` preserving the hardware's
+serial semantics (feedback at step t sees TA state from t-1).
+
+Runtime hyperparameters ``s`` and ``T`` are traced scalars carried in
+:class:`~repro.core.tm.TMRuntime` — changing them (the paper's I/O ports) never
+triggers re-compilation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tm as tm_mod
+from repro.core.tm import TMConfig, TMRuntime, TMState
+
+
+class StepAux(NamedTuple):
+    """Per-step observability (feeds the accuracy/energy analysis blocks)."""
+
+    votes: jax.Array       # [C] int32 class sums (training-mode clause outputs)
+    predicted: jax.Array   # scalar int32 argmax class (inference-mode)
+    correct: jax.Array     # scalar bool
+    activity: jax.Array    # scalar f32 — fraction of TAs that changed state
+                           # (the clock-gating/energy analogue, DESIGN.md §2)
+
+
+def _feedback_selection(
+    cfg: TMConfig,
+    rt: TMRuntime,
+    votes: jax.Array,  # [C] int32
+    y: jax.Array,      # scalar int32 target class
+    key: jax.Array,
+):
+    """Choose per-clause feedback types for the target + one sampled non-target.
+
+    Target class y:   P(feedback) = (T - clip(v_y)) / 2T
+                      positive-polarity clauses -> Type I, negative -> Type II.
+    Sampled class ny: P(feedback) = (T + clip(v_ny)) / 2T
+                      positive -> Type II, negative -> Type I.
+    """
+    k_neg, k_t, k_n = jax.random.split(key, 3)
+    T = rt.T.astype(jnp.float32)
+    C, J = cfg.max_classes, cfg.max_clauses
+
+    # Sample a non-target active class uniformly (the paper's multi-class rule).
+    neg_ok = rt.class_mask & (jnp.arange(C) != y)
+    logits = jnp.where(neg_ok, 0.0, -jnp.inf)
+    ny = jax.random.categorical(k_neg, logits)
+
+    v = jnp.clip(votes, -rt.T, rt.T).astype(jnp.float32)
+    p_t = (T - v[y]) / (2.0 * T)
+    p_n = (T + v[ny]) / (2.0 * T)
+
+    sel_t = (jax.random.uniform(k_t, (J,)) < p_t) & rt.clause_mask
+    sel_n = (jax.random.uniform(k_n, (J,)) < p_n) & rt.clause_mask
+
+    pos = tm_mod.clause_polarity(cfg) > 0  # [J]
+    onehot_y = jax.nn.one_hot(y, C, dtype=bool)
+    onehot_n = jax.nn.one_hot(ny, C, dtype=bool)
+
+    type1 = (
+        onehot_y[:, None] & (sel_t & pos)[None, :]
+        | onehot_n[:, None] & (sel_n & ~pos)[None, :]
+    )
+    type2 = (
+        onehot_y[:, None] & (sel_t & ~pos)[None, :]
+        | onehot_n[:, None] & (sel_n & pos)[None, :]
+    )
+    # Inactive classes never receive feedback (over-provisioning, §3.1.1).
+    type1 = type1 & rt.class_mask[:, None]
+    type2 = type2 & rt.class_mask[:, None]
+    return type1, type2
+
+
+def train_step(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    x: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+) -> tuple[TMState, StepAux]:
+    """One supervised datapoint: inference + feedback for all clauses/TAs.
+
+    This is the paper's 2-clock-cycle datapath: everything below is one fused
+    plane of (C x J x 2f) elementwise work plus two small reductions.
+    """
+    k_sel, k_u = jax.random.split(key)
+    lits = tm_mod.make_literals(x)
+    include = tm_mod.ta_actions(cfg, state, rt)
+
+    clauses_tr = tm_mod.eval_clauses(cfg, include, lits, rt, training=True)
+    votes = tm_mod.class_sums(cfg, clauses_tr)
+
+    type1, type2 = _feedback_selection(cfg, rt, votes, y, k_sel)
+    u = jax.random.uniform(
+        k_u, (cfg.max_classes, cfg.max_clauses, cfg.n_literals), dtype=jnp.float32
+    )
+
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as _kops
+
+        new_ta = _kops.feedback_step(
+            state.ta_state, lits, clauses_tr, type1, type2, u,
+            s=rt.s, n_states=cfg.n_states, s_policy=cfg.s_policy,
+            boost_true_positive=cfg.boost_true_positive,
+        )
+    else:
+        from repro.kernels import ref as _kref
+
+        new_ta = _kref.feedback_step(
+            state.ta_state, lits, clauses_tr, type1, type2, u,
+            s=rt.s, n_states=cfg.n_states, s_policy=cfg.s_policy,
+            boost_true_positive=cfg.boost_true_positive,
+        )
+
+    # Inference-mode prediction for monitoring (empty clauses vote 0).
+    clauses_inf = tm_mod.eval_clauses(cfg, include, lits, rt, training=False)
+    votes_inf = tm_mod.class_sums(cfg, clauses_inf)
+    votes_inf = jnp.where(rt.class_mask, votes_inf, jnp.iinfo(jnp.int32).min)
+    pred = jnp.argmax(votes_inf).astype(jnp.int32)
+
+    activity = jnp.mean((new_ta != state.ta_state).astype(jnp.float32))
+    aux = StepAux(
+        votes=votes,
+        predicted=pred,
+        correct=(pred == y),
+        activity=activity,
+    )
+    return TMState(ta_state=new_ta), aux
+
+
+def train_datapoints(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    xs: jax.Array,       # [n, f] bool
+    ys: jax.Array,       # [n] int32
+    key: jax.Array,
+    valid: jax.Array | None = None,  # [n] bool — masked-out rows are skipped
+) -> tuple[TMState, StepAux]:
+    """Stream datapoints serially (lax.scan), matching the FPGA's row order.
+
+    ``valid`` lets fixed-shape sets carry variable row counts (class filtering,
+    partial sets) without recompilation: invalid rows leave state untouched.
+    """
+    n = xs.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+
+    def body(carry, inp):
+        st = carry
+        x, y, v, k = inp
+        new_st, aux = train_step(cfg, st, rt, x, y, k)
+        st = jax.tree.map(lambda a, b: jnp.where(v, a, b), new_st, st)
+        aux = aux._replace(
+            activity=jnp.where(v, aux.activity, 0.0),
+            correct=aux.correct & v,
+        )
+        return st, aux
+
+    keys = jax.random.split(key, n)
+    final, auxes = jax.lax.scan(body, state, (xs, ys, valid, keys))
+    return final, auxes
+
+
+@partial(jax.jit, static_argnums=0)
+def train_epochs(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    xs: jax.Array,
+    ys: jax.Array,
+    key: jax.Array,
+    n_epochs: int | jax.Array,
+    valid: jax.Array | None = None,
+) -> TMState:
+    """Repeat the dataset for a (traced) number of epochs.
+
+    ``n_epochs`` is a runtime value: the scan runs to a static max derived from
+    the array only when traced as python int; otherwise use fori_loop.
+    """
+    n_epochs = jnp.asarray(n_epochs, dtype=jnp.int32)
+
+    def body(i, st):
+        k = jax.random.fold_in(key, i)
+        new_st, _ = train_datapoints(cfg, st, rt, xs, ys, k, valid)
+        return new_st
+
+    return jax.lax.fori_loop(0, n_epochs, body, state)

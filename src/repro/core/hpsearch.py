@@ -1,0 +1,103 @@
+"""Accelerated hyperparameter search + cross-validation (paper goal ii, §5).
+
+The paper: "the fast execution time allows entire datasets to be analyzed in a
+matter of seconds, allowing the optimum hyper-parameters ... to be discovered
+within a short period of time." On TPU the acceleration axis is *replication*:
+every (ordering x s x T) replica is an independent TM, so the whole grid is
+one `vmap`-ed program, and the replica axis shards over the device mesh
+(`data` axis) with pjit for pod-scale search.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accuracy as acc_mod
+from repro.core import feedback as fb_mod
+from repro.core import tm as tm_mod
+from repro.core.tm import TMConfig, TMRuntime, TMState
+
+
+class GridResult(NamedTuple):
+    s_grid: np.ndarray        # [S]
+    T_grid: np.ndarray        # [T]
+    val_accuracy: jax.Array   # [S, T, O] per-ordering validation accuracy
+    mean_accuracy: jax.Array  # [S, T]
+
+
+def _one_cell(
+    cfg: TMConfig,
+    s: jax.Array,
+    T: jax.Array,
+    off_x, off_y, val_x, val_y,
+    key: jax.Array,
+    n_epochs: int,
+) -> jax.Array:
+    """Train one TM with (s, T) on one ordering's offline set; return val acc."""
+    rt = tm_mod.init_runtime(cfg)._replace(s=s, T=T)
+    state = tm_mod.init_state(cfg)
+    state = fb_mod.train_epochs(cfg, state, rt, off_x, off_y, key, n_epochs)
+    return acc_mod.analyze(cfg, state, rt, val_x, val_y)
+
+
+@partial(jax.jit, static_argnums=(0, 6))
+def grid_search_device(
+    cfg: TMConfig,
+    s_grid: jax.Array,   # [S] f32
+    T_grid: jax.Array,   # [G] i32
+    off_sets,            # (off_x [O,n,f], off_y [O,n])
+    val_sets,            # (val_x [O,m,f], val_y [O,m])
+    keys: jax.Array,     # [O] keys
+    n_epochs: int,
+) -> jax.Array:
+    """Validation accuracy for every (s, T, ordering). [S, G, O] f32."""
+    off_x, off_y = off_sets
+    val_x, val_y = val_sets
+
+    per_ordering = jax.vmap(
+        lambda s, T: jax.vmap(
+            lambda ox, oy, vx, vy, k: _one_cell(
+                cfg, s, T, ox, oy, vx, vy, k, n_epochs
+            )
+        )(off_x, off_y, val_x, val_y, keys)
+    , in_axes=(None, 0))
+    return jax.vmap(per_ordering, in_axes=(0, None))(s_grid, T_grid)
+
+
+def grid_search(
+    cfg: TMConfig,
+    s_values,
+    T_values,
+    off_x, off_y, val_x, val_y,
+    *,
+    n_epochs: int = 10,
+    seed: int = 0,
+) -> GridResult:
+    """Host wrapper: the full (s x T x orderings) sweep as one program."""
+    s_grid = jnp.asarray(s_values, dtype=jnp.float32)
+    T_grid = jnp.asarray(T_values, dtype=jnp.int32)
+    n_orderings = off_x.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_orderings)
+    acc = grid_search_device(
+        cfg, s_grid, T_grid,
+        (jnp.asarray(off_x, bool), jnp.asarray(off_y, jnp.int32)),
+        (jnp.asarray(val_x, bool), jnp.asarray(val_y, jnp.int32)),
+        keys, n_epochs,
+    )
+    return GridResult(
+        s_grid=np.asarray(s_grid),
+        T_grid=np.asarray(T_grid),
+        val_accuracy=acc,
+        mean_accuracy=jnp.mean(acc, axis=-1),
+    )
+
+
+def best(result: GridResult) -> tuple[float, int, float]:
+    """(s*, T*, mean validation accuracy) of the best grid cell."""
+    m = np.asarray(result.mean_accuracy)
+    i, j = np.unravel_index(np.argmax(m), m.shape)
+    return float(result.s_grid[i]), int(result.T_grid[j]), float(m[i, j])

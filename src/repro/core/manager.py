@@ -1,0 +1,210 @@
+"""System operation FSM (paper §4, Fig. 3).
+
+Execution flow: offline training -> accuracy analysis (offline/validation/
+online sets) -> [online training pass -> accuracy analysis] x n_cycles.
+
+Runtime *schedules* express the paper's use-case events — class introduction
+(§5.2), fault injection (§5.3), s/T changes — as pure functions of the cycle
+index over the fixed-shape runtime, so one traced program covers the whole
+experiment and `vmap` runs all cross-validation orderings simultaneously.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accuracy as acc_mod
+from repro.core import feedback as fb_mod
+from repro.core.tm import TMConfig, TMRuntime, TMState
+
+
+class Sets(NamedTuple):
+    """The three data sets (§3.6.1) with validity masks (fixed shapes).
+
+    ``offline_train_valid`` restricts TRAINING rows (§5.1 uses 20 of 30);
+    ``offline_valid`` governs accuracy ANALYSIS of the offline set (the paper
+    analyzes the full set, so the 10 untrained rows count toward accuracy).
+    """
+
+    offline_x: jax.Array     # [n_off, f] bool
+    offline_y: jax.Array     # [n_off] i32
+    offline_valid: jax.Array # [n_off] bool — analysis mask
+    validation_x: jax.Array
+    validation_y: jax.Array
+    validation_valid: jax.Array
+    online_x: jax.Array
+    online_y: jax.Array
+    online_valid: jax.Array
+    offline_train_valid: jax.Array = None  # [n_off] bool — training mask
+
+
+class CycleCtl(NamedTuple):
+    """Per-cycle control word produced by a schedule (the runtime 'ports')."""
+
+    rt: TMRuntime
+    sets: Sets
+    online_enabled: jax.Array  # scalar bool
+
+
+# A schedule maps (cycle_index, base_runtime, base_sets) -> CycleCtl.
+# cycle_index == -1 denotes the offline-training phase.
+Schedule = Callable[[jax.Array, TMRuntime, Sets], CycleCtl]
+
+
+def default_schedule(cycle: jax.Array, rt: TMRuntime, sets: Sets) -> CycleCtl:
+    return CycleCtl(rt=rt, sets=sets, online_enabled=jnp.bool_(True))
+
+
+def make_schedule(
+    *,
+    online_enabled: bool = True,
+    filtered_class: int | None = None,
+    introduce_at_cycle: int | None = None,
+    fault_masks: tuple[jax.Array, jax.Array] | None = None,
+    inject_at_cycle: int | None = None,
+    online_s: float | None = None,
+) -> Schedule:
+    """Compose the paper's use-case events into one schedule.
+
+    * ``filtered_class`` — class removed from all sets (and the class mask)
+      until ``introduce_at_cycle`` (None = filtered forever). §5.2.
+    * ``fault_masks`` — (and_mask, or_mask) written at ``inject_at_cycle``. §5.3.
+    * ``online_s`` — the runtime s-port value used during online cycles. §5.1.
+    """
+
+    def schedule(cycle: jax.Array, rt: TMRuntime, sets: Sets) -> CycleCtl:
+        cycle = jnp.asarray(cycle, dtype=jnp.int32)
+
+        if filtered_class is not None:
+            if introduce_at_cycle is None:
+                filtering = jnp.bool_(True)
+            else:
+                filtering = cycle < introduce_at_cycle
+
+            def filt(ys, valid):
+                return valid & jnp.where(filtering, ys != filtered_class, True)
+
+            sets = sets._replace(
+                offline_valid=filt(sets.offline_y, sets.offline_valid),
+                validation_valid=filt(sets.validation_y, sets.validation_valid),
+                online_valid=filt(sets.online_y, sets.online_valid),
+            )
+            # The over-provisioned class is enabled only once introduced.
+            n_cls = rt.class_mask.shape[0]
+            cls_mask = rt.class_mask & jnp.where(
+                filtering, jnp.arange(n_cls) != filtered_class, True
+            )
+            rt = rt._replace(class_mask=cls_mask)
+
+        if fault_masks is not None and inject_at_cycle is not None:
+            and_m, or_m = fault_masks
+            injected = cycle >= inject_at_cycle
+            rt = rt._replace(
+                ta_and_mask=jnp.where(injected, and_m, rt.ta_and_mask),
+                ta_or_mask=jnp.where(injected, or_m, rt.ta_or_mask),
+            )
+
+        if online_s is not None:
+            rt = rt._replace(
+                s=jnp.where(cycle >= 0, jnp.float32(online_s), rt.s)
+            )
+
+        return CycleCtl(rt=rt, sets=sets, online_enabled=jnp.bool_(online_enabled))
+
+    return schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    """High-level manager parameters (paper §5: 10 offline epochs, 16 cycles)."""
+
+    n_offline_epochs: int = 10
+    n_online_cycles: int = 16
+
+
+def _analyze_all(cfg, state, ctl: CycleCtl) -> jax.Array:
+    s = ctl.sets
+    return jnp.stack([
+        acc_mod.analyze(cfg, state, ctl.rt, s.offline_x, s.offline_y, s.offline_valid),
+        acc_mod.analyze(cfg, state, ctl.rt, s.validation_x, s.validation_y,
+                        s.validation_valid),
+        acc_mod.analyze(cfg, state, ctl.rt, s.online_x, s.online_y, s.online_valid),
+    ])
+
+
+@partial(jax.jit, static_argnums=(0, 1, 5))
+def run_system(
+    cfg: TMConfig,
+    sys_cfg: SystemConfig,
+    state: TMState,
+    rt: TMRuntime,
+    sets: Sets,
+    schedule: Schedule,
+    key: jax.Array,
+) -> tuple[TMState, jax.Array, jax.Array]:
+    """Run the full Fig-3 flow.
+
+    Returns (final_state,
+             accuracies [1 + n_cycles, 3] (offline/validation/online sets),
+             activity   [n_cycles] mean TA-update activity per online cycle).
+    """
+    k_off, k_onl = jax.random.split(key)
+
+    # --- offline training phase (cycle index -1) ---
+    ctl0 = schedule(jnp.int32(-1), rt, sets)
+    train_valid = ctl0.sets.offline_train_valid
+    if train_valid is None:
+        train_valid = ctl0.sets.offline_valid
+    else:
+        train_valid = train_valid & ctl0.sets.offline_valid
+    state = fb_mod.train_epochs(
+        cfg, state, ctl0.rt,
+        ctl0.sets.offline_x, ctl0.sets.offline_y,
+        k_off, sys_cfg.n_offline_epochs,
+        valid=train_valid,
+    )
+    acc0 = _analyze_all(cfg, state, ctl0)
+
+    # --- online cycles ---
+    def body(carry, cycle):
+        st = carry
+        ctl = schedule(cycle, rt, sets)
+        k = jax.random.fold_in(k_onl, cycle)
+        new_st, aux = fb_mod.train_datapoints(
+            cfg, st, ctl.rt, ctl.sets.online_x, ctl.sets.online_y, k,
+            valid=ctl.sets.online_valid,
+        )
+        st = jax.tree.map(
+            lambda a, b: jnp.where(ctl.online_enabled, a, b), new_st, st
+        )
+        accs = _analyze_all(cfg, st, ctl)
+        activity = jnp.where(
+            ctl.online_enabled, jnp.mean(aux.activity), 0.0
+        )
+        return st, (accs, activity)
+
+    cycles = jnp.arange(sys_cfg.n_online_cycles, dtype=jnp.int32)
+    state, (accs, activity) = jax.lax.scan(body, state, cycles)
+    return state, jnp.concatenate([acc0[None], accs], axis=0), activity
+
+
+def run_orderings(
+    cfg: TMConfig,
+    sys_cfg: SystemConfig,
+    states: TMState,       # leading axis = ordering
+    rt: TMRuntime,
+    sets: Sets,            # leading axis = ordering on every leaf
+    schedule: Schedule,
+    keys: jax.Array,       # [O, 2] keys
+):
+    """All cross-validation orderings in parallel (vmap over the leading axis).
+
+    This is the paper's 120-orderings re-run executed as ONE batched program —
+    the TPU-native form of its block-ROM cross-validation subsystem.
+    """
+    fn = lambda st, ss, k: run_system(cfg, sys_cfg, st, rt, ss, schedule, k)
+    return jax.vmap(fn)(states, sets, keys)

@@ -1,0 +1,111 @@
+"""Online data manager + interleaved learning session (paper §3.5, §4).
+
+The FPGA's online path: datapoints arrive from an application-dependent source,
+pass through the cyclic buffer (so accuracy-analysis stalls never drop data),
+and are consumed one per request by the TM manager which interleaves training
+with inference. ``OnlineSession`` reproduces that control path on the host with
+jitted device steps; all device-side state is fixed-shape.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import feedback as fb_mod
+from repro.core import tm as tm_mod
+from repro.core.tm import TMConfig, TMRuntime, TMState
+from repro.data import buffer as buf_mod
+from repro.data.memory import DataSource
+
+
+class SessionState(NamedTuple):
+    tm: TMState
+    buf: buf_mod.RingBuffer
+    step: jax.Array  # int32 — online datapoints consumed
+
+
+@partial(jax.jit, static_argnums=0)
+def _enqueue(cfg: TMConfig, ss: SessionState, x, y):
+    new_buf, ok = buf_mod.push(ss.buf, x, y)
+    return ss._replace(buf=new_buf), ok
+
+
+@partial(jax.jit, static_argnums=0)
+def _consume(cfg: TMConfig, ss: SessionState, rt: TMRuntime, key):
+    """Pop one buffered datapoint and apply one online training step."""
+    new_buf, x, y, valid = buf_mod.pop(ss.buf)
+    new_tm, aux = fb_mod.train_step(cfg, ss.tm, rt, x, y, key)
+    tm = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new_tm, ss.tm)
+    out = SessionState(
+        tm=tm, buf=new_buf, step=ss.step + valid.astype(jnp.int32)
+    )
+    return out, valid, aux
+
+
+class OnlineSession:
+    """Host-side driver for interleaved inference + online learning.
+
+    * ``offer(x, y)``     — producer side: push into the cyclic buffer.
+    * ``learn_available``  — consumer side: drain up to ``max_points`` buffered
+      datapoints through online training (the per-cycle budget of Fig. 3).
+    * ``infer(xs)``        — batched inference at any time.
+    """
+
+    def __init__(
+        self,
+        cfg: TMConfig,
+        state: TMState,
+        rt: TMRuntime,
+        *,
+        buffer_capacity: int = 64,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.rt = rt
+        self._key = jax.random.PRNGKey(seed)
+        self.ss = SessionState(
+            tm=state,
+            buf=buf_mod.make(buffer_capacity, cfg.n_features),
+            step=jnp.int32(0),
+        )
+        self.dropped = 0  # producer-side backpressure events
+
+    def offer(self, x, y) -> bool:
+        x = jnp.asarray(x, dtype=bool)
+        y = jnp.asarray(y, dtype=jnp.int32)
+        self.ss, ok = _enqueue(self.cfg, self.ss, x, y)
+        accepted = bool(ok)
+        if not accepted:
+            self.dropped += 1
+        return accepted
+
+    def fill_from(self, source: DataSource, n: int) -> int:
+        """Pull ``n`` rows from a data source into the buffer."""
+        accepted = 0
+        for _ in range(n):
+            x, y = source.next_row()
+            accepted += self.offer(x, int(y))
+        return accepted
+
+    def learn_available(self, max_points: int) -> int:
+        """Consume up to ``max_points`` buffered datapoints; returns #trained."""
+        trained = 0
+        for _ in range(max_points):
+            self._key, k = jax.random.split(self._key)
+            self.ss, valid, _ = _consume(self.cfg, self.ss, self.rt, k)
+            if not bool(valid):
+                break
+            trained += 1
+        return trained
+
+    def infer(self, xs) -> np.ndarray:
+        xs = jnp.asarray(xs, dtype=bool)
+        return np.asarray(tm_mod.predict_batch(self.cfg, self.ss.tm, self.rt, xs))
+
+    @property
+    def buffered(self) -> int:
+        return int(self.ss.buf.size)

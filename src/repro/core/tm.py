@@ -1,0 +1,223 @@
+"""Tsetlin Machine core — the paper's central datapath, in JAX.
+
+The TM here mirrors the FPGA architecture of the paper:
+
+* a bank of Tsetlin automata (TA) per (class, clause, literal) whose 2N-state
+  counters decide include/exclude of each literal,
+* clause evaluation as an include-masked AND over literals (+ complements),
+* a majority vote (positive/negative polarity clauses) per class,
+* **over-provisioning**: the arrays are allocated at `max_classes`/`max_clauses`
+  (the paper's pre-synthesis parameters) while *runtime masks* select the active
+  subset — the JAX analogue of avoiding FPGA re-synthesis is avoiding re-JIT:
+  shapes never change when classes/clauses are enabled at runtime,
+* **fault injection**: per-TA AND/OR masks force TA action outputs to stuck-at
+  values exactly as the paper's fault controller does (§3.1.2).
+
+Everything is a pure function over explicit state so the whole machine can be
+`vmap`-ed over cross-validation orderings / hyperparameter grids and `pjit`-ed
+over a device mesh (the paper's goal (ii): accelerated CV + HP search).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Configuration (the paper's design-time parameters, §3.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TMConfig:
+    """Design-time parameters — fixed at trace time (≈ FPGA synthesis time).
+
+    `max_classes` / `max_clauses` over-provision resources (§3.1.1); the active
+    subset is selected at *runtime* via masks carried in :class:`TMRuntime`.
+    """
+
+    n_features: int                  # booleanized input width (iris: 16)
+    max_classes: int                 # provisioned classes (≥ active classes)
+    max_clauses: int                 # provisioned clauses per class (even)
+    n_states: int = 99               # N states per action (TA has 2N states)
+    s_policy: str = "standard"       # "standard" | "hardware"  (see DESIGN.md §2)
+    boost_true_positive: bool = True # deterministic strengthen on (clause=1,lit=1)
+    backend: str = "ref"             # "ref" | "pallas" clause/feedback backend
+
+    def __post_init__(self):
+        if self.max_clauses % 2:
+            raise ValueError("max_clauses must be even (half +, half - polarity)")
+        if self.n_states < 1:
+            raise ValueError("n_states must be >= 1")
+        if self.s_policy not in ("standard", "hardware"):
+            raise ValueError(f"unknown s_policy {self.s_policy!r}")
+        if self.backend not in ("ref", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    @property
+    def n_literals(self) -> int:
+        return 2 * self.n_features
+
+    @property
+    def state_dtype(self):
+        # 2N must fit the dtype; int8 keeps the TA bank tiny (paper: few bits/TA).
+        return jnp.int8 if 2 * self.n_states <= 127 else jnp.int16
+
+
+# ---------------------------------------------------------------------------
+# Runtime-controllable knobs (the paper's I/O-port parameters, §3.1)
+# ---------------------------------------------------------------------------
+
+
+class TMRuntime(NamedTuple):
+    """Runtime ports: adjustable WITHOUT re-JIT (paper: without re-synthesis).
+
+    * ``s``/``T`` — the runtime hyperparameter ports,
+    * ``clause_mask`` — the clause-number port (over-provisioned clauses gated),
+    * ``class_mask`` — over-provisioned classes gated until introduced,
+    * ``ta_and_mask``/``ta_or_mask`` — the fault-controller mappings (§3.1.2):
+      action' = (action AND and_mask) OR or_mask. Fault-free: and=1, or=0.
+    """
+
+    s: jax.Array            # scalar f32 — sensitivity
+    T: jax.Array            # scalar i32 — vote threshold/target
+    clause_mask: jax.Array  # [max_clauses] bool
+    class_mask: jax.Array   # [max_classes] bool
+    ta_and_mask: jax.Array  # [max_classes, max_clauses, 2f] bool
+    ta_or_mask: jax.Array   # [max_classes, max_clauses, 2f] bool
+
+
+class TMState(NamedTuple):
+    """Learnt state: the TA bank. States 1..N => exclude, N+1..2N => include."""
+
+    ta_state: jax.Array  # [max_classes, max_clauses, 2f] int8/int16
+
+
+def init_state(cfg: TMConfig, key: Optional[jax.Array] = None) -> TMState:
+    """TA bank initialised at the decision boundary (states N or N+1).
+
+    The FPGA initialises automata randomly on either side of the boundary;
+    with a key we do the same, without a key we use the deterministic N
+    (all-exclude) start which the hardware also supports.
+    """
+    shape = (cfg.max_classes, cfg.max_clauses, cfg.n_literals)
+    n = cfg.n_states
+    if key is None:
+        ta = jnp.full(shape, n, dtype=cfg.state_dtype)
+    else:
+        coin = jax.random.bernoulli(key, 0.5, shape)
+        ta = jnp.where(coin, n + 1, n).astype(cfg.state_dtype)
+    return TMState(ta_state=ta)
+
+
+def init_runtime(
+    cfg: TMConfig,
+    *,
+    s: float = 3.9,
+    T: int = 15,
+    n_active_classes: Optional[int] = None,
+    n_active_clauses: Optional[int] = None,
+) -> TMRuntime:
+    """Fault-free runtime with the first ``n_active_*`` resources enabled."""
+    n_cls = cfg.max_classes if n_active_classes is None else n_active_classes
+    n_clz = cfg.max_clauses if n_active_clauses is None else n_active_clauses
+    shape = (cfg.max_classes, cfg.max_clauses, cfg.n_literals)
+    return TMRuntime(
+        s=jnp.float32(s),
+        T=jnp.int32(T),
+        clause_mask=jnp.arange(cfg.max_clauses) < n_clz,
+        class_mask=jnp.arange(cfg.max_classes) < n_cls,
+        ta_and_mask=jnp.ones(shape, dtype=bool),
+        ta_or_mask=jnp.zeros(shape, dtype=bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Datapath: literals -> faulted actions -> clauses -> votes (paper Fig. 1)
+# ---------------------------------------------------------------------------
+
+
+def make_literals(x: jax.Array) -> jax.Array:
+    """Boolean features -> literal vector [x, ~x] (length 2f)."""
+    x = x.astype(bool)
+    return jnp.concatenate([x, ~x], axis=-1)
+
+
+def ta_actions(cfg: TMConfig, state: TMState, rt: TMRuntime) -> jax.Array:
+    """Include bits from TA states, with the fault controller applied.
+
+    action = state > N;  action' = (action & and_mask) | or_mask  (§3.1.2).
+    """
+    include = state.ta_state > cfg.n_states
+    return (include & rt.ta_and_mask) | rt.ta_or_mask
+
+
+def clause_polarity(cfg: TMConfig) -> jax.Array:
+    """+1 for even-indexed clauses, -1 for odd (half vote for, half against)."""
+    return jnp.where(jnp.arange(cfg.max_clauses) % 2 == 0, 1, -1).astype(jnp.int32)
+
+
+def eval_clauses(
+    cfg: TMConfig,
+    include: jax.Array,   # [C, J, 2f] bool  (post-fault actions)
+    literals: jax.Array,  # [2f] bool
+    rt: TMRuntime,
+    *,
+    training: bool,
+) -> jax.Array:
+    """Clause outputs [C, J] bool.
+
+    A clause fires iff every included literal is 1. Empty clauses output 1
+    during training (so Type I feedback can grow them) and 0 during inference
+    (standard TM convention; the paper inherits it from [5]).
+    """
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as _kops
+
+        out = _kops.clause_eval(include, literals, training=training)
+    else:
+        from repro.kernels import ref as _kref
+
+        out = _kref.clause_eval(include, literals, training=training)
+    return out & rt.clause_mask[None, :]
+
+
+def class_sums(cfg: TMConfig, clause_out: jax.Array) -> jax.Array:
+    """Per-class vote: sum of +/- polarity clause outputs. [C] int32."""
+    pol = clause_polarity(cfg)
+    return jnp.sum(clause_out.astype(jnp.int32) * pol[None, :], axis=-1)
+
+
+def forward(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    x: jax.Array,
+    *,
+    training: bool = False,
+):
+    """One datapoint through the datapath. Returns (clause_out [C,J], votes [C])."""
+    lits = make_literals(x)
+    include = ta_actions(cfg, state, rt)
+    clauses = eval_clauses(cfg, include, lits, rt, training=training)
+    return clauses, class_sums(cfg, clauses)
+
+
+def predict(cfg: TMConfig, state: TMState, rt: TMRuntime, x: jax.Array) -> jax.Array:
+    """argmax class over active classes (inactive classes vote -inf)."""
+    _, votes = forward(cfg, state, rt, x, training=False)
+    votes = jnp.where(rt.class_mask, votes, jnp.iinfo(jnp.int32).min)
+    return jnp.argmax(votes)
+
+
+@partial(jax.jit, static_argnums=0)
+def predict_batch(
+    cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array
+) -> jax.Array:
+    """Vectorised inference over a batch of datapoints (the serving path)."""
+    return jax.vmap(lambda x: predict(cfg, state, rt, x))(xs)

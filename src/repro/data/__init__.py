@@ -1,0 +1,1 @@
+"""Data-management subsystems (paper §3.4-3.6)."""

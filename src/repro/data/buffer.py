@@ -1,0 +1,72 @@
+"""Cyclic online-input buffer (paper §3.5.2).
+
+The FPGA buffers online datapoints in RAM so none are dropped while the
+accuracy-analysis process stalls the consumer. Here the buffer is a fixed-shape
+ring in device memory (capacity x features + head/size scalars) updated with
+``dynamic_update_slice`` — bounded memory, pure-functional, scan/vmap friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RingBuffer(NamedTuple):
+    data_x: jax.Array  # [capacity, f] bool
+    data_y: jax.Array  # [capacity] int32
+    head: jax.Array    # scalar int32 — next slot to pop
+    size: jax.Array    # scalar int32 — valid entries
+
+    @property
+    def capacity(self) -> int:
+        return self.data_x.shape[0]
+
+
+def make(capacity: int, n_features: int) -> RingBuffer:
+    return RingBuffer(
+        data_x=jnp.zeros((capacity, n_features), dtype=bool),
+        data_y=jnp.zeros((capacity,), dtype=jnp.int32),
+        head=jnp.int32(0),
+        size=jnp.int32(0),
+    )
+
+
+def push(buf: RingBuffer, x: jax.Array, y: jax.Array) -> tuple[RingBuffer, jax.Array]:
+    """Append one datapoint. Returns (buffer, accepted?).
+
+    A full buffer rejects the push (the FPGA would stall its producer; we
+    surface the condition so the caller can apply backpressure).
+    """
+    cap = buf.capacity
+    full = buf.size >= cap
+    tail = jnp.mod(buf.head + buf.size, cap)
+    new_x = jax.lax.dynamic_update_slice(buf.data_x, x[None].astype(bool), (tail, 0))
+    new_y = jax.lax.dynamic_update_slice(
+        buf.data_y, y[None].astype(jnp.int32), (tail,)
+    )
+    out = RingBuffer(
+        data_x=jnp.where(full, buf.data_x, new_x),
+        data_y=jnp.where(full, buf.data_y, new_y),
+        head=buf.head,
+        size=jnp.where(full, buf.size, buf.size + 1),
+    )
+    return out, ~full
+
+
+def pop(buf: RingBuffer) -> tuple[RingBuffer, jax.Array, jax.Array, jax.Array]:
+    """Remove the oldest datapoint. Returns (buffer, x, y, valid?).
+
+    Popping an empty buffer returns valid=False and leaves state untouched.
+    """
+    empty = buf.size <= 0
+    x = jax.lax.dynamic_slice(buf.data_x, (buf.head, 0), (1, buf.data_x.shape[1]))[0]
+    y = jax.lax.dynamic_slice(buf.data_y, (buf.head,), (1,))[0]
+    out = RingBuffer(
+        data_x=buf.data_x,
+        data_y=buf.data_y,
+        head=jnp.where(empty, buf.head, jnp.mod(buf.head + 1, buf.capacity)),
+        size=jnp.where(empty, buf.size, buf.size - 1),
+    )
+    return out, x, y, ~empty

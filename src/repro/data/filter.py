@@ -1,0 +1,31 @@
+"""Class filter IP (paper §3.4.1).
+
+Removes a chosen class from a data stream under an external enable signal —
+used by the unseen-class-introduction use case (§5.2). Shapes stay fixed:
+filtering yields a *validity mask* instead of resizing arrays, so toggling the
+enable at runtime never recompiles (the paper's no-re-synthesis property).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def class_filter_mask(
+    ys: jax.Array,              # [n] int32 labels
+    filtered_class: jax.Array,  # scalar int32
+    enabled: jax.Array,         # scalar bool — the external enable signal
+    base_valid: jax.Array | None = None,
+) -> jax.Array:
+    """Validity mask: rows of ``filtered_class`` dropped while ``enabled``."""
+    ys = jnp.asarray(ys)
+    keep = jnp.where(enabled, ys != filtered_class, True)
+    if base_valid is not None:
+        keep = keep & base_valid
+    return keep
+
+
+def limit_mask(n: int, limit: jax.Array) -> jax.Array:
+    """Validity mask enabling only the first ``limit`` rows (e.g. the paper's
+    §5.1 use of 20 of the 30 offline rows)."""
+    return jnp.arange(n) < limit

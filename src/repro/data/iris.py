@@ -1,0 +1,108 @@
+"""The iris dataset (Fisher 1936 / UCI) + TM booleanization.
+
+The paper's experiments use iris with *16 booleanised inputs, 3 classes, 150
+unique datapoints*. We embed the canonical dataset (sepal length/width, petal
+length/width in cm; classes setosa=0, versicolor=1, virginica=2) and
+booleanise each of the 4 features with a 4-level thermometer code against
+per-feature quantile thresholds => 4 x 4 = 16 boolean inputs, matching the
+paper's input width.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# 150 rows x (sepal_len, sepal_wid, petal_len, petal_wid), class-major
+# (50 setosa, 50 versicolor, 50 virginica) — canonical UCI ordering.
+_IRIS = np.array([
+    [5.1, 3.5, 1.4, 0.2], [4.9, 3.0, 1.4, 0.2], [4.7, 3.2, 1.3, 0.2],
+    [4.6, 3.1, 1.5, 0.2], [5.0, 3.6, 1.4, 0.2], [5.4, 3.9, 1.7, 0.4],
+    [4.6, 3.4, 1.4, 0.3], [5.0, 3.4, 1.5, 0.2], [4.4, 2.9, 1.4, 0.2],
+    [4.9, 3.1, 1.5, 0.1], [5.4, 3.7, 1.5, 0.2], [4.8, 3.4, 1.6, 0.2],
+    [4.8, 3.0, 1.4, 0.1], [4.3, 3.0, 1.1, 0.1], [5.8, 4.0, 1.2, 0.2],
+    [5.7, 4.4, 1.5, 0.4], [5.4, 3.9, 1.3, 0.4], [5.1, 3.5, 1.4, 0.3],
+    [5.7, 3.8, 1.7, 0.3], [5.1, 3.8, 1.5, 0.3], [5.4, 3.4, 1.7, 0.2],
+    [5.1, 3.7, 1.5, 0.4], [4.6, 3.6, 1.0, 0.2], [5.1, 3.3, 1.7, 0.5],
+    [4.8, 3.4, 1.9, 0.2], [5.0, 3.0, 1.6, 0.2], [5.0, 3.4, 1.6, 0.4],
+    [5.2, 3.5, 1.5, 0.2], [5.2, 3.4, 1.4, 0.2], [4.7, 3.2, 1.6, 0.2],
+    [4.8, 3.1, 1.6, 0.2], [5.4, 3.4, 1.5, 0.4], [5.2, 4.1, 1.5, 0.1],
+    [5.5, 4.2, 1.4, 0.2], [4.9, 3.1, 1.5, 0.2], [5.0, 3.2, 1.2, 0.2],
+    [5.5, 3.5, 1.3, 0.2], [4.9, 3.6, 1.4, 0.1], [4.4, 3.0, 1.3, 0.2],
+    [5.1, 3.4, 1.5, 0.2], [5.0, 3.5, 1.3, 0.3], [4.5, 2.3, 1.3, 0.3],
+    [4.4, 3.2, 1.3, 0.2], [5.0, 3.5, 1.6, 0.6], [5.1, 3.8, 1.9, 0.4],
+    [4.8, 3.0, 1.4, 0.3], [5.1, 3.8, 1.6, 0.2], [4.6, 3.2, 1.4, 0.2],
+    [5.3, 3.7, 1.5, 0.2], [5.0, 3.3, 1.4, 0.2],
+    [7.0, 3.2, 4.7, 1.4], [6.4, 3.2, 4.5, 1.5], [6.9, 3.1, 4.9, 1.5],
+    [5.5, 2.3, 4.0, 1.3], [6.5, 2.8, 4.6, 1.5], [5.7, 2.8, 4.5, 1.3],
+    [6.3, 3.3, 4.7, 1.6], [4.9, 2.4, 3.3, 1.0], [6.6, 2.9, 4.6, 1.3],
+    [5.2, 2.7, 3.9, 1.4], [5.0, 2.0, 3.5, 1.0], [5.9, 3.0, 4.2, 1.5],
+    [6.0, 2.2, 4.0, 1.0], [6.1, 2.9, 4.7, 1.4], [5.6, 2.9, 3.6, 1.3],
+    [6.7, 3.1, 4.4, 1.4], [5.6, 3.0, 4.5, 1.5], [5.8, 2.7, 4.1, 1.0],
+    [6.2, 2.2, 4.5, 1.5], [5.6, 2.5, 3.9, 1.1], [5.9, 3.2, 4.8, 1.8],
+    [6.1, 2.8, 4.0, 1.3], [6.3, 2.5, 4.9, 1.5], [6.1, 2.8, 4.7, 1.2],
+    [6.4, 2.9, 4.3, 1.3], [6.6, 3.0, 4.4, 1.4], [6.8, 2.8, 4.8, 1.4],
+    [6.7, 3.0, 5.0, 1.7], [6.0, 2.9, 4.5, 1.5], [5.7, 2.6, 3.5, 1.0],
+    [5.5, 2.4, 3.8, 1.1], [5.5, 2.4, 3.7, 1.0], [5.8, 2.7, 3.9, 1.2],
+    [6.0, 2.7, 5.1, 1.6], [5.4, 3.0, 4.5, 1.5], [6.0, 3.4, 4.5, 1.6],
+    [6.7, 3.1, 4.7, 1.5], [6.3, 2.3, 4.4, 1.3], [5.6, 3.0, 4.1, 1.3],
+    [5.5, 2.5, 4.0, 1.3], [5.5, 2.6, 4.4, 1.2], [6.1, 3.0, 4.6, 1.4],
+    [5.8, 2.6, 4.0, 1.2], [5.0, 2.3, 3.3, 1.0], [5.6, 2.7, 4.2, 1.3],
+    [5.7, 3.0, 4.2, 1.2], [5.7, 2.9, 4.2, 1.3], [6.2, 2.9, 4.3, 1.3],
+    [5.1, 2.5, 3.0, 1.1], [5.7, 2.8, 4.1, 1.3],
+    [6.3, 3.3, 6.0, 2.5], [5.8, 2.7, 5.1, 1.9], [7.1, 3.0, 5.9, 2.1],
+    [6.3, 2.9, 5.6, 1.8], [6.5, 3.0, 5.8, 2.2], [7.6, 3.0, 6.6, 2.1],
+    [4.9, 2.5, 4.5, 1.7], [7.3, 2.9, 6.3, 1.8], [6.7, 2.5, 5.8, 1.8],
+    [7.2, 3.6, 6.1, 2.5], [6.5, 3.2, 5.1, 2.0], [6.4, 2.7, 5.3, 1.9],
+    [6.8, 3.0, 5.5, 2.1], [5.7, 2.5, 5.0, 2.0], [5.8, 2.8, 5.1, 2.4],
+    [6.4, 3.2, 5.3, 2.3], [6.5, 3.0, 5.5, 1.8], [7.7, 3.8, 6.7, 2.2],
+    [7.7, 2.6, 6.9, 2.3], [6.0, 2.2, 5.0, 1.5], [6.9, 3.2, 5.7, 2.3],
+    [5.6, 2.8, 4.9, 2.0], [7.7, 2.8, 6.7, 2.0], [6.3, 2.7, 4.9, 1.8],
+    [6.7, 3.3, 5.7, 2.1], [7.2, 3.2, 6.0, 1.8], [6.2, 2.8, 4.8, 1.8],
+    [6.1, 3.0, 4.9, 1.8], [6.4, 2.8, 5.6, 2.1], [7.2, 3.0, 5.8, 1.6],
+    [7.4, 2.8, 6.1, 1.9], [7.9, 3.8, 6.4, 2.0], [6.4, 2.8, 5.6, 2.2],
+    [6.3, 2.8, 5.1, 1.5], [6.1, 2.6, 5.6, 1.4], [7.7, 3.0, 6.1, 2.3],
+    [6.3, 3.4, 5.6, 2.4], [6.4, 3.1, 5.5, 1.8], [6.0, 3.0, 4.8, 1.8],
+    [6.9, 3.1, 5.4, 2.1], [6.7, 3.1, 5.6, 2.4], [6.9, 3.1, 5.1, 2.3],
+    [5.8, 2.7, 5.1, 1.9], [6.8, 3.2, 5.9, 2.3], [6.7, 3.3, 5.7, 2.5],
+    [6.7, 3.0, 5.2, 2.3], [6.3, 2.5, 5.0, 1.9], [6.5, 3.0, 5.2, 2.0],
+    [6.2, 3.4, 5.4, 2.3], [5.9, 3.0, 5.1, 1.8],
+])
+_LABELS = np.repeat(np.arange(3), 50)
+
+N_FEATURES_RAW = 4
+N_THERMOMETER_BITS = 4
+N_BOOL_FEATURES = N_FEATURES_RAW * N_THERMOMETER_BITS  # 16, as in the paper
+N_CLASSES = 3
+N_POINTS = 150
+
+
+def raw() -> tuple[np.ndarray, np.ndarray]:
+    """(features [150,4] f32, labels [150] i32)."""
+    return _IRIS.astype(np.float32).copy(), _LABELS.astype(np.int32).copy()
+
+
+def thermometer_thresholds(x: np.ndarray, n_bits: int = N_THERMOMETER_BITS) -> np.ndarray:
+    """Per-feature quantile thresholds [f, n_bits] (20/40/60/80th pct for 4 bits)."""
+    qs = np.linspace(0, 100, n_bits + 2)[1:-1]
+    return np.percentile(x, qs, axis=0).T  # [f, n_bits]
+
+
+def booleanize(x: np.ndarray, thresholds: np.ndarray) -> np.ndarray:
+    """Thermometer-encode: bit b of feature f is (x_f >= thresholds[f, b])."""
+    return (x[:, :, None] >= thresholds[None, :, :]).reshape(x.shape[0], -1)
+
+
+def load(seed: int = 2023) -> tuple[np.ndarray, np.ndarray]:
+    """Booleanized iris, deterministically shuffled.
+
+    The paper's block cross-validation needs class-mixed blocks (the raw UCI
+    file is class-major); a fixed-seed shuffle gives every 30-row block a
+    representative class mix, mirroring the paper's stratification intent.
+
+    Returns (xs [150,16] bool, ys [150] int32).
+    """
+    x, y = raw()
+    thr = thermometer_thresholds(x)
+    xb = booleanize(x, thr)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(N_POINTS)
+    return xb[perm].astype(bool), y[perm].astype(np.int32)

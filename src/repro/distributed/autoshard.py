@@ -1,0 +1,83 @@
+"""Ambient sharding hints for model-internal tensors.
+
+GSPMD propagates shardings from inputs, but data-dependent ops (MoE scatter
+dispatch, top-k) and long einsum chains can drop them, silently replicating
+multi-TB intermediates. Model code calls ``hint(x, axis_names...)`` at the few
+load-bearing points; the launcher activates a mesh with ``use(mesh)``. With no
+active mesh (CPU smoke tests) hints are no-ops, so model code stays
+mesh-agnostic.
+
+Axis-name entries may be None, a mesh axis name, or a tuple of axis names
+(e.g. ("pod", "data") for a combined DP dimension). Names missing from the
+active mesh or not dividing the dimension are dropped — the production
+fallback is replication on that dim, never a crash.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def setting(name: str, default=None):
+    """Launcher-provided knob (e.g. moe_expert_axis: 'model' for training EP,
+    'data' for weight-stationary serving EP)."""
+    return getattr(_state, "settings", {}).get(name, default)
+
+
+@contextlib.contextmanager
+def use(mesh: Optional[Mesh], **settings):
+    prev = current_mesh()
+    prev_s = getattr(_state, "settings", {})
+    _state.mesh = mesh
+    _state.settings = settings
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.settings = prev_s
+
+
+def _filter_entry(mesh: Mesh, dim: int, entry):
+    if entry is None:
+        return None
+    names = entry if isinstance(entry, tuple) else (entry,)
+    names = tuple(n for n in names if n in mesh.shape)
+    if not names:
+        return None
+    size = int(np.prod([mesh.shape[n] for n in names]))
+    if size <= 1 or dim % size != 0:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def hint(x: jax.Array, *axes) -> jax.Array:
+    """Constrain x's sharding (no-op without an active mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    used: set = set()
+    parts = []
+    for dim, entry in zip(x.shape, axes):
+        e = _filter_entry(mesh, dim, entry)
+        if e is not None:
+            flat = e if isinstance(e, tuple) else (e,)
+            if any(n in used for n in flat):
+                e = None
+            else:
+                used.update(flat)
+        parts.append(e)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PS(*parts))
+    )

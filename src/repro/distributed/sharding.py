@@ -1,0 +1,194 @@
+"""Logical-axis sharding rules -> NamedShardings (DP / FSDP / TP / EP / SP).
+
+Every parameter carries logical axis names from its PSpec (models/params.py);
+a rule table maps logical axes to mesh axes. On top of plain TP we apply
+ZeRO-3/FSDP: each parameter's largest *unsharded* dimension is additionally
+sharded over the (pod, data) axes, which also shards optimizer state (the
+optimizer tree reuses parameter shardings).
+
+Rules silently fall back to replication when a dimension is not divisible by
+the mesh-axis size (e.g. kv_heads=1 with model=16) — exactly what a
+production sharding pass must do rather than crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.models.params import PSpec, tree_map_specs
+
+# Logical-axis -> mesh-axis table (TP/EP on "model").
+DEFAULT_RULES: dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "expert_ff": "model",
+    "experts": "model",
+    "embed": None,
+    "inner": "model",       # ssm/rglru inner width
+    "ssm_heads": "model",
+    "conv": None,
+    "state": None,
+    "layers": None,
+    None: None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    fsdp: bool = True                      # ZeRO-3 over (pod, data)
+    fsdp_axes: tuple[str, ...] = ("pod", "data")
+    data_axes: tuple[str, ...] = ("pod", "data")  # batch sharding
+    seq_axis: Optional[str] = None         # SP: shard sequence/cache over this
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _mesh_axes_present(mesh: Mesh, axes: tuple[str, ...]) -> tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def spec_partition(
+    spec: PSpec, mesh: Mesh, policy: ShardingPolicy
+) -> PS:
+    """PartitionSpec for one parameter."""
+    parts: list = []
+    used: set[str] = set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        mesh_ax = policy.rules.get(ax)
+        if (
+            mesh_ax is not None
+            and mesh_ax in mesh.shape
+            and mesh_ax not in used
+            and dim % mesh.shape[mesh_ax] == 0
+        ):
+            parts.append(mesh_ax)
+            used.add(mesh_ax)
+        else:
+            parts.append(None)
+
+    if policy.fsdp:
+        fsdp = _mesh_axes_present(mesh, policy.fsdp_axes)
+        fsdp = tuple(a for a in fsdp if a not in used)
+        if fsdp:
+            group = int(np.prod([mesh.shape[a] for a in fsdp]))
+            # shard the largest still-unsharded dim that divides the group
+            order = sorted(
+                range(len(spec.shape)),
+                key=lambda i: -(spec.shape[i] // max(
+                    _axis_size(mesh, parts[i]) if isinstance(parts[i], str)
+                    else 1, 1)),
+            )
+            for i in order:
+                if parts[i] is None and spec.shape[i] % group == 0:
+                    parts[i] = fsdp if len(fsdp) > 1 else fsdp[0]
+                    break
+
+    return PS(*parts)
+
+
+def param_shardings(specs_tree, mesh: Mesh, policy: ShardingPolicy):
+    """NamedSharding tree matching a PSpec tree."""
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_partition(s, mesh, policy)),
+        specs_tree,
+    )
+
+
+def batch_shardings(batch_struct, mesh: Mesh, policy: ShardingPolicy):
+    """Shard inputs: leading batch dim over data axes; optional SP on seq.
+
+    Works on a tree of ShapeDtypeStructs (dry-run) or arrays.
+    """
+    data = _mesh_axes_present(mesh, policy.data_axes)
+    data_spec = data if len(data) > 1 else (data[0] if data else None)
+
+    def one(x):
+        shape = x.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, PS())
+        group = int(np.prod([mesh.shape[a] for a in data])) if data else 1
+        parts: list = [None] * len(shape)
+        if group > 1 and shape[0] % group == 0:
+            parts[0] = data_spec
+        if (
+            policy.seq_axis is not None
+            and len(shape) >= 2
+            and policy.seq_axis in mesh.shape
+            and shape[1] % mesh.shape[policy.seq_axis] == 0
+        ):
+            parts[1] = policy.seq_axis
+        return NamedSharding(mesh, PS(*parts))
+
+    return jax.tree.map(
+        one, batch_struct,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jax.Array)),
+    )
+
+
+def cache_shardings(cache_struct, mesh: Mesh, policy: ShardingPolicy):
+    """KV/state cache shardings, key-aware.
+
+    * self-attention k/v ([L?, B, S|W, Hkv, Dh]): batch over data, HEAD_DIM
+      over model. Sharding Dh keeps the one-token decode write shard-local
+      (an S-sharded cache turns the DUS into a full-buffer select under
+      SPMD); attention contracts Dh into small partial-sum all-reduces.
+    * cross-attention ck/cv: read-only and small — batch over data only.
+    * SSM/RGLRU h/conv states: inner width (>=1024) over model (matches the
+      TP sharding of the recurrent weights), batch over data.
+    """
+    model = "model" if "model" in mesh.shape else None
+    data = _mesh_axes_present(mesh, policy.data_axes)
+    data_spec = data if len(data) > 1 else (data[0] if data else None)
+    group = int(np.prod([mesh.shape[a] for a in data])) if data else 1
+
+    def data_dims(parts, shape):
+        for i in range(min(2, len(shape))):
+            if parts[i] is None and group > 1 and shape[i] % group == 0:
+                parts[i] = data_spec
+                break
+        return parts
+
+    def one(path, x):
+        key = str(path[-1].key) if path and hasattr(path[-1], "key") else ""
+        shape = x.shape
+        parts: list = [None] * len(shape)
+        msize = mesh.shape[model] if model else 1
+        if key in ("k", "v") and len(shape) >= 4:
+            # Long caches shard S over model: decode READS then touch only
+            # 1/model of the cache per device (context parallelism) — worth
+            # far more than the one-token select-DUS write tax it causes
+            # (§Perf A1 measured unsharding at ~10x MORE traffic). Short
+            # window caches shard head_dim (writes stay shard-local).
+            seq_dim = len(shape) - 3
+            if model and shape[seq_dim] >= 4096 and shape[seq_dim] % msize == 0:
+                parts[seq_dim] = model
+            elif model and shape[-1] % msize == 0 and shape[-1] >= msize:
+                parts[-1] = model
+        elif key in ("ck", "cv"):
+            pass  # replicate over model; batch over data below
+        else:  # h / conv and other states: inner width over model
+            for i in sorted(range(1, len(shape)), key=lambda i: -shape[i]):
+                if model and shape[i] >= 1024 and shape[i] % msize == 0:
+                    parts[i] = model
+                    break
+        parts = data_dims(parts, shape)
+        return NamedSharding(mesh, PS(*parts))
+
+    import jax.tree_util as jtu
+
+    return jtu.tree_map_with_path(
+        one, cache_struct,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jax.Array)),
+    )

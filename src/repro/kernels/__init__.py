@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §8).
+
+clause_eval.py — clause evaluation as an int8 MXU matmul (the paper's
+                 2-cycle inference datapath, recast for the systolic array)
+feedback.py    — fused Type I/II TA-bank update (one VPU pass per datapoint)
+ops.py         — jit'd public wrappers (interpret=True on CPU; TPU target)
+ref.py         — pure-jnp oracles; kernels are asserted bit-exact vs these
+"""

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: clause evaluation as an MXU matvec.
+
+TPU adaptation of the paper's 2-cycle clause datapath (DESIGN.md §2/§8):
+the FPGA computes each clause as a wide AND over included literals with
+dedicated LUT trees. On TPU we recast the AND-reduction as an **int8 matmul
+on the MXU**:
+
+    violations[c,j] = sum_k include[c,j,k] * (1 - literal[k])
+    n_included[c,j] = sum_k include[c,j,k]
+
+    clause fires      <=> violations == 0
+    clause is "empty" <=> n_included == 0  (training: fires; inference: not)
+
+Both sums come from ONE [CJ, L] x [L, 2] int8 matmul (rhs columns = ~literals
+and ones), so the whole clause plane rides the systolic array instead of the
+VPU, and the include bank streams HBM->VMEM exactly once per datapoint.
+
+The block grid tiles the flattened (class x clause) axis; the literal axis is
+kept whole per block (L is small: 2 x booleanized features — iris 32, MNIST
+1568 — far under VMEM limits at int8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# int8-native TPU tile: 32 sublanes x 128 lanes.
+BLK_CJ = 32
+LANES = 128
+
+
+def _kernel(inc_ref, rhs_ref, out_ref):
+    # inc: [BLK_CJ, Lp] int8, rhs: [Lp, LANES] int8 -> out: [BLK_CJ, LANES] i32
+    out_ref[...] = jnp.dot(
+        inc_ref[...], rhs_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_counts(
+    include: jax.Array,   # [CJ, L] int8/bool — flattened (class, clause) rows
+    literals: jax.Array,  # [L] bool
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(violations [CJ] i32, n_included [CJ] i32) via one MXU matmul."""
+    cj, L = include.shape
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Lp = -(-L // LANES) * LANES
+
+    inc = jnp.zeros((cjp, Lp), dtype=jnp.int8).at[:cj, :L].set(
+        include.astype(jnp.int8)
+    )
+    # rhs col 0: ~literal (violation counter); col 1: ones (include counter).
+    rhs = jnp.zeros((Lp, LANES), dtype=jnp.int8)
+    rhs = rhs.at[:L, 0].set(1 - literals.astype(jnp.int8))
+    rhs = rhs.at[:L, 1].set(1)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(cjp // BLK_CJ,),
+        in_specs=[
+            pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
+            pl.BlockSpec((Lp, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK_CJ, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cjp, LANES), jnp.int32),
+        interpret=interpret,
+    )(inc, rhs)
+    return out[:cj, 0], out[:cj, 1]
+
+
+def clause_eval(
+    include: jax.Array,   # [C, J, L] bool (post-fault TA actions)
+    literals: jax.Array,  # [L] bool
+    *,
+    training: bool,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed clause outputs [C, J] bool (same contract as ref)."""
+    C, J, L = include.shape
+    viol, n_inc = clause_counts(
+        include.reshape(C * J, L), literals, interpret=interpret
+    )
+    fired = viol == 0
+    empty = n_inc == 0
+    out = jnp.where(empty, jnp.bool_(training), fired)
+    return out.reshape(C, J)

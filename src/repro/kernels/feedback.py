@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused Type I/II TA-bank update.
+
+The FPGA applies feedback to every TA in one clock. Here the whole
+(class x clause x literal) plane is one elementwise VPU pass, fused so the
+TA states are read+written exactly once per datapoint and no [CJ, L]
+intermediates (deltas, masks) ever round-trip to HBM.
+
+Layout: rows = flattened (class, clause); lanes = literals. Per-clause
+control (clause output, Type I/II selection) is packed into the first three
+columns of a [CJ, LANES] int8 control block so every operand block is
+TPU-tile aligned; probabilities ride a [1, LANES] f32 vector (col 0 =
+p_strengthen, col 1 = p_erase) and broadcast inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_CJ = 32
+LANES = 128
+
+
+def _kernel(n_states: int, ta_ref, lit_ref, ctl_ref, u_ref, p_ref, out_ref):
+    ta = ta_ref[...].astype(jnp.int32)        # [BLK, Lp]
+    lit = lit_ref[...] != 0                   # [1, Lp] bool
+    ctl = ctl_ref[...]                        # [BLK, LANES] int8
+    u = u_ref[...]                            # [BLK, Lp] f32
+    p = p_ref[...]                            # [1, LANES] f32
+
+    c_out = ctl[:, 0:1] != 0                  # [BLK, 1]
+    t1 = ctl[:, 1:2] != 0
+    t2 = ctl[:, 2:3] != 0
+
+    p_strengthen = p[0:1, 0:1]                # [1, 1] broadcasts over the plane
+    p_erase = p[0:1, 1:2]
+
+    include = ta > n_states
+    strengthen = c_out & lit                  # clause fired & literal true
+    d1 = jnp.where(
+        strengthen,
+        (u < p_strengthen).astype(jnp.int32),
+        -((u < p_erase).astype(jnp.int32)),
+    )
+    d2 = (c_out & (~lit) & (~include)).astype(jnp.int32)
+    delta = jnp.where(t1, d1, 0) + jnp.where(t2, d2, 0)
+    out_ref[...] = jnp.clip(ta + delta, 1, 2 * n_states).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_states", "interpret")
+)
+def feedback_plane(
+    ta_state: jax.Array,    # [CJ, L] int8/int16
+    literals: jax.Array,    # [L] bool
+    clause_out: jax.Array,  # [CJ] bool
+    type1_sel: jax.Array,   # [CJ] bool
+    type2_sel: jax.Array,   # [CJ] bool
+    u: jax.Array,           # [CJ, L] f32 uniforms
+    p_strengthen: jax.Array,  # scalar f32
+    p_erase: jax.Array,       # scalar f32
+    *,
+    n_states: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused TA update over the flattened plane. Returns new ta_state [CJ, L]."""
+    cj, L = ta_state.shape
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Lp = -(-L // LANES) * LANES
+    dt = ta_state.dtype
+
+    ta = jnp.ones((cjp, Lp), dtype=dt).at[:cj, :L].set(ta_state)
+    lit = jnp.zeros((1, Lp), dtype=jnp.int8).at[0, :L].set(
+        literals.astype(jnp.int8)
+    )
+    ctl = jnp.zeros((cjp, LANES), dtype=jnp.int8)
+    ctl = ctl.at[:cj, 0].set(clause_out.astype(jnp.int8))
+    ctl = ctl.at[:cj, 1].set(type1_sel.astype(jnp.int8))
+    ctl = ctl.at[:cj, 2].set(type2_sel.astype(jnp.int8))
+    # Pad u with 1.0 so padded lanes never draw an action.
+    up = jnp.ones((cjp, Lp), dtype=jnp.float32).at[:cj, :L].set(
+        u.astype(jnp.float32)
+    )
+    p = jnp.zeros((1, LANES), dtype=jnp.float32)
+    p = p.at[0, 0].set(p_strengthen).at[0, 1].set(p_erase)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_states),
+        grid=(cjp // BLK_CJ,),
+        in_specs=[
+            pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
+            pl.BlockSpec((1, Lp), lambda i: (0, 0)),
+            pl.BlockSpec((BLK_CJ, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cjp, Lp), dt),
+        interpret=interpret,
+    )(ta, lit, ctl, up, p)
+    return out[:cj, :L]

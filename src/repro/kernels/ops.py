@@ -1,0 +1,59 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Same contracts as :mod:`repro.kernels.ref` (the pure-jnp oracles) so the TM
+core can switch backends with ``TMConfig.backend``. ``interpret`` defaults to
+True — this container is CPU-only; on a real TPU pass ``interpret=False``
+(the kernels are written against TPU tile constraints: int8 32x128 blocks,
+128-lane last dims, MXU-shaped matmuls).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import clause_eval as _ce
+from repro.kernels import feedback as _fb
+
+INTERPRET = True  # flipped by launch scripts when running on real TPUs
+
+
+def clause_eval(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """[C, J, L] bool x [L] bool -> [C, J] bool (see ref.clause_eval)."""
+    return _ce.clause_eval(
+        include, literals, training=training, interpret=INTERPRET
+    )
+
+
+def feedback_step(
+    ta_state: jax.Array,
+    literals: jax.Array,
+    clause_out: jax.Array,
+    type1_sel: jax.Array,
+    type2_sel: jax.Array,
+    u: jax.Array,
+    *,
+    s: jax.Array,
+    n_states: int,
+    s_policy: str,
+    boost_true_positive: bool,
+) -> jax.Array:
+    """Same contract as ref.feedback_step, backed by the fused Pallas kernel."""
+    C, J, L = ta_state.shape
+    s = jnp.asarray(s, dtype=jnp.float32)
+    p_strengthen = jnp.where(boost_true_positive, 1.0, (s - 1.0) / s)
+    p_erase = (1.0 / s) if s_policy == "standard" else (s - 1.0) / s
+    out = _fb.feedback_plane(
+        ta_state.reshape(C * J, L),
+        literals,
+        clause_out.reshape(C * J),
+        type1_sel.reshape(C * J),
+        type2_sel.reshape(C * J),
+        u.reshape(C * J, L),
+        p_strengthen,
+        jnp.asarray(p_erase, dtype=jnp.float32),
+        n_states=n_states,
+        interpret=INTERPRET,
+    )
+    return out.reshape(C, J, L)

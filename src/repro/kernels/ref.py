@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: the Pallas kernels in ``clause_eval.py``
+and ``feedback.py`` are asserted allclose against these across shape/dtype
+sweeps (see tests/test_kernels_*.py). They are also the default CPU backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clause_eval(include: jax.Array, literals: jax.Array, *, training: bool) -> jax.Array:
+    """Clause outputs: AND over included literals.
+
+    Args:
+      include: [C, J, L] bool — post-fault TA actions (L = 2*features).
+      literals: [L] bool — input literal vector [x, ~x].
+      training: empty clauses output 1 while training, 0 at inference.
+
+    Returns: [C, J] bool clause outputs.
+    """
+    # A clause fails iff some included literal is 0.
+    match = jnp.logical_or(~include, literals[None, None, :])
+    fired = jnp.all(match, axis=-1)
+    empty = ~jnp.any(include, axis=-1)
+    return jnp.where(empty, jnp.bool_(training), fired)
+
+
+def clause_eval_batch(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """Batched clause eval: literals [B, L] -> [B, C, J]."""
+    return jax.vmap(lambda l: clause_eval(include, l, training=training))(literals)
+
+
+def feedback_step(
+    ta_state: jax.Array,    # [C, J, L] int8/int16 (pre-update)
+    literals: jax.Array,    # [L] bool
+    clause_out: jax.Array,  # [C, J] bool (training-mode, post-fault outputs)
+    type1_sel: jax.Array,   # [C, J] bool — clauses given Type I feedback
+    type2_sel: jax.Array,   # [C, J] bool — clauses given Type II feedback
+    u: jax.Array,           # [C, J, L] f32 uniforms in [0,1) — one draw per TA
+    *,
+    s: jax.Array,           # scalar f32
+    n_states: int,
+    s_policy: str,
+    boost_true_positive: bool,
+) -> jax.Array:
+    """One datapoint's TA-bank update (Type I + Type II). Returns new ta_state.
+
+    Type I (recognize/erase — combats false negatives):
+      clause=1 & lit=1:  strengthen include  w.p. p_strengthen
+      otherwise:         push toward exclude w.p. p_erase
+    Type II (reject — combats false positives):
+      clause=1 & lit=0 & excluded: +1 toward include, deterministic.
+
+    s-policies (DESIGN.md §2):
+      standard: p_strengthen=(s-1)/s (or 1 if boost), p_erase=1/s
+      hardware: p_strengthen=(s-1)/s (or 1 if boost), p_erase=(s-1)/s
+                (all stochastic events rarer as s->1: the paper's low-power bias)
+    """
+    p_strengthen = jnp.where(boost_true_positive, 1.0, (s - 1.0) / s)
+    p_erase = (1.0 / s) if s_policy == "standard" else (s - 1.0) / s
+
+    lit = literals[None, None, :]
+    c_out = clause_out[:, :, None]
+    include = ta_state > n_states
+
+    # Type I deltas.
+    strengthen = c_out & lit
+    d1 = jnp.where(
+        strengthen,
+        (u < p_strengthen).astype(jnp.int32),
+        -((u < p_erase).astype(jnp.int32)),
+    )
+
+    # Type II deltas: insert a blocking literal.
+    d2 = (c_out & ~lit & ~include).astype(jnp.int32)
+
+    delta = (
+        type1_sel[:, :, None].astype(jnp.int32) * d1
+        + type2_sel[:, :, None].astype(jnp.int32) * d2
+    )
+    new_state = jnp.clip(ta_state.astype(jnp.int32) + delta, 1, 2 * n_states)
+    return new_state.astype(ta_state.dtype)

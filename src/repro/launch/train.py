@@ -1,0 +1,76 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+Single-host CPU runs use reduced (smoke) configs by default; pass --full to
+train the full config (requires a real cluster). The loop is the
+fault-tolerant driver in repro.train.loop (checkpoint/restart, straggler
+watch, nan-watchdog).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.data import synthetic
+from repro.models import params as P
+from repro.models import stubs, transformer
+from repro.train import loop as loop_mod
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (configs.get_config(args.arch) if args.full
+           else configs.get_smoke_config(args.arch))
+    tc = ts_mod.TrainConfig(
+        opt=opt_mod.OptConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=max(args.steps // 20, 5)),
+        microbatches=args.microbatches,
+        grad_compress=args.grad_compress,
+    )
+    specs = transformer.model_specs(cfg)
+    prm = P.materialize(specs, jax.random.PRNGKey(args.seed), jnp.float32)
+    state = ts_mod.init_state(tc, prm)
+    n_params = P.count_params(specs)
+    print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    data = synthetic.token_batches(cfg, shape, seed=args.seed)
+
+    step_fn = jax.jit(lambda s, b: ts_mod.train_step(cfg, tc, s, b),
+                      donate_argnums=(0,))
+    lc = loop_mod.LoopConfig(
+        total_steps=args.steps, checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir,
+    )
+    state = loop_mod.resume_or_init(lc, state)
+    state, report = loop_mod.run(lc, state, step_fn, data)
+    print(f"done: steps_run={report.steps_run} "
+          f"final_loss={report.losses[-1] if report.losses else None} "
+          f"faults={len(report.fault_events)} "
+          f"stragglers={len(report.straggler_steps)} "
+          f"restores={report.restores}")
+
+
+if __name__ == "__main__":
+    main()

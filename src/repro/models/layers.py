@@ -1,0 +1,432 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, gated MLPs.
+
+Pure functions over explicit parameter dicts (built from PSpec trees in
+:mod:`repro.models.params`). Attention comes in three temporal modes:
+
+* full-sequence (training / prefill) with causal or sliding-window masks,
+* single-token decode against a KV cache (`dynamic_update_slice` writes),
+* cross-attention over stub modality embeddings (vlm), flamingo-style gated.
+
+Numerics: parameters fp32 (or per-config), matmuls in `cfg.compute_dtype`
+(bf16 on TPU), softmax/logsumexp always fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+
+# ---------------------------------------------------------------------------
+# Param spec builders
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": PSpec((d,), ("embed",), "ones"),
+                "bias": PSpec((d,), ("embed",), "zeros")}
+    return {"scale": PSpec((d,), ("embed",), "ones")}
+
+
+def attention_specs(cfg: ModelConfig, *, gated: bool = False) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    sp = {
+        "wq": PSpec((d, hq, dh), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((hq, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = PSpec((hq, dh), ("heads", "head_dim"), "zeros")
+        sp["bk"] = PSpec((hkv, dh), ("kv_heads", "head_dim"), "zeros")
+        sp["bv"] = PSpec((hkv, dh), ("kv_heads", "head_dim"), "zeros")
+    if gated:
+        sp["gate"] = PSpec((), (), "zeros")  # tanh-gated residual, init 0
+    return sp
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": PSpec((d, f), ("embed", "ff")),
+            "w_up": PSpec((d, f), ("embed", "ff")),
+            "w_down": PSpec((f, d), ("ff", "embed")),
+        }
+    return {
+        "w_up": PSpec((d, f), ("embed", "ff")),
+        "w_down": PSpec((f, d), ("ff", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward ops
+# ---------------------------------------------------------------------------
+
+
+def norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S] or [S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return out
+
+
+def _project_qkv(cfg, p, x, xkv=None):
+    """q: [B,S,Hq,D]; k,v: [B,T,Hkv,D] (xkv defaults to x)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    xkv = x if xkv is None else xkv
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    k = jnp.einsum("btd,dhk->bthk", xkv.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", xkv.astype(cd), p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return q, k, v
+
+
+def _gqa_scores_out(cfg, q, k, v, mask):
+    """Grouped-query attention core. mask: [B or 1, 1, S, T] additive f32."""
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    B, S = q.shape[0], q.shape[1]
+    T = k.shape[1]
+    qg = q.reshape(B, S, hkv, g, q.shape[-1])
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = scores + mask[:, :, None, :, :]  # [B,kv,g,S,T]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, hq, q.shape[-1])
+
+
+def _chunk_mask(S: int, j, chunk: int, window: Optional[int]):
+    """Validity of (query i, key j*chunk+t) pairs. [S, chunk] bool."""
+    qi = jnp.arange(S)
+    kpos = j * chunk + jnp.arange(chunk)
+    ok = kpos[None, :] <= qi[:, None]
+    if window is not None:
+        ok &= (qi[:, None] - kpos[None, :]) < window
+    return ok
+
+
+def _flash_fwd_impl(q, k, v, window: Optional[int], chunk: int):
+    """Streaming-softmax forward. q:[B,S,Hq,D], k/v:[B,S,Hkv,D].
+    Returns (out [B,S,Hq,D], lse [B,Hkv,g,S] f32)."""
+    cd = q.dtype
+    B, S, hq, D = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    n_chunks = S // chunk
+    qg = q.reshape(B, S, hkv, g, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    kc = k.reshape(B, n_chunks, chunk, hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, hkv, D).transpose(1, 0, 2, 3, 4)
+
+    m0 = jnp.full((B, hkv, g, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, hkv, g, S), jnp.float32)
+    a0 = jnp.zeros((B, hkv, g, S, D), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kj).astype(jnp.float32)
+        s = s * scale
+        ok = _chunk_mask(S, j, chunk, window)
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        live = ~jnp.isinf(m_new)   # fully-masked prefix guard (window warmup)
+        p = jnp.where(live[..., None], jnp.exp(s - m_new[..., None]), 0.0)
+        r = jnp.where(live & ~jnp.isinf(m), jnp.exp(m - m_new), 0.0)
+        l = l * r + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(cd), vj)
+        acc = acc * r[..., None] + pv.astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, hq, D)
+    return out.astype(cd), lse
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _flash_fn(window: Optional[int], chunk: int):
+    """custom_vjp flash attention: the backward recomputes per-chunk
+    probabilities from the saved logsumexp stats (never stores the stacked
+    [n_chunks, ..., S, chunk] score tensors the naive scan-grad would)."""
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return _flash_fwd_impl(q, k, v, window, chunk)[0]
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd_impl(q, k, v, window, chunk)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, do):
+        q, k, v, out, lse = res
+        cd = q.dtype
+        B, S, hq, D = q.shape
+        hkv = k.shape[2]
+        g = hq // hkv
+        n_chunks = S // chunk
+        scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+        qg = q.reshape(B, S, hkv, g, D)
+        dog = do.reshape(B, S, hkv, g, D)
+        og = out.reshape(B, S, hkv, g, D)
+        # D_row = sum_d do * o   [B,hkv,g,S]
+        Drow = jnp.einsum("bskgd,bskgd->bkgs",
+                          dog.astype(jnp.float32), og.astype(jnp.float32))
+
+        kc = k.reshape(B, n_chunks, chunk, hkv, D).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(B, n_chunks, chunk, hkv, D).transpose(1, 0, 2, 3, 4)
+        dq0 = jnp.zeros((B, S, hkv, g, D), jnp.float32)
+
+        def body(dq, inp):
+            j, kj, vj = inp
+            s = jnp.einsum("bskgd,btkd->bkgst", qg, kj).astype(jnp.float32)
+            s = s * scale
+            ok = _chunk_mask(S, j, chunk, window)
+            p = jnp.where(ok[None, None, None],
+                          jnp.exp(s - lse[..., None]), 0.0)
+            dv_j = jnp.einsum("bkgst,bskgd->btkd", p.astype(cd), dog)
+            dp = jnp.einsum("bskgd,btkd->bkgst", dog, vj).astype(jnp.float32)
+            ds = p * (dp - Drow[..., None]) * scale
+            dq = dq + jnp.einsum("bkgst,btkd->bskgd",
+                                 ds.astype(cd), kj).astype(jnp.float32)
+            dk_j = jnp.einsum("bkgst,bskgd->btkd", ds.astype(cd), qg)
+            return dq, (dk_j, dv_j)
+
+        dq, (dks, dvs) = jax.lax.scan(
+            body, dq0, (jnp.arange(n_chunks), kc, vc)
+        )
+        dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, S, hkv, D)
+        dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, S, hkv, D)
+        return dq.astype(cd).reshape(B, S, hq, D), dk.astype(cd), dv.astype(cd)
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def gqa_attention(cfg, q, k, v, *, window: Optional[int]):
+    """Full-sequence GQA dispatch: dense mask below the chunk threshold,
+    flash (streaming-softmax, custom-vjp) above it."""
+    S = q.shape[1]
+    chunk = getattr(cfg, "attn_chunk", 512)
+    if S > chunk and S % chunk == 0:
+        return _flash_fn(window, chunk)(q, k, v)
+    mask = causal_mask(S, S, window=window)
+    return _gqa_scores_out(cfg, q, k, v, mask)
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: Optional[int] = None):
+    """Additive mask [1,1,S,T]: query i attends keys j with
+    j <= i+offset and (window is None or i+offset - j < window)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= (qi - kj) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[None, None]
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                 # [B, S, D]
+    *,
+    window: Optional[int] = None,
+    pos_offset: int = 0,
+) -> jax.Array:
+    """Full-sequence causal (optionally sliding-window) self-attention."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    S = x.shape[1]
+    q, k, v = _project_qkv(cfg, p, x)
+    pos = jnp.arange(S) + pos_offset
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    out = gqa_attention(cfg, q, k, v, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def decode_self_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,        # [B, 1, D] — the new token
+    cache_k: jax.Array,  # [B, S_max, Hkv, Dh]
+    cache_v: jax.Array,
+    pos: jax.Array,      # scalar i32 — index of the new token
+    *,
+    window: Optional[int] = None,
+):
+    """One decode step: write K/V at ``pos``, attend to the valid prefix."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    q, k, v = _project_qkv(cfg, p, x)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k = rope(k, pos[None], cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0)
+    )
+    T = ck.shape[1]
+    kj = jnp.arange(T)
+    ok = kj <= pos
+    if window is not None:
+        ok &= (pos - kj) < window
+    mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[None, None, None, :]
+    out = _gqa_scores_out(cfg, q, ck.astype(cd), cv.astype(cd), mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)), ck, cv
+
+
+def decode_local_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,        # [B, 1, D]
+    cache_k: jax.Array,  # [B, W, Hkv, Dh] rotating window cache
+    cache_v: jax.Array,
+    pos: jax.Array,      # scalar i32 — ABSOLUTE position of the new token
+):
+    """Sliding-window decode against a rotating cache (slot = pos % W).
+
+    Keys were RoPE'd at their absolute positions when written; a slot s holds
+    the key for absolute position  pos - ((pos - s) mod W),  which is negative
+    (=> masked) until the window has warmed up.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    W = cache_k.shape[1]
+    q, k, v = _project_qkv(cfg, p, x)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k = rope(k, pos[None], cfg.rope_theta)
+    slot = jnp.mod(pos, W)
+    ck = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0)
+    )
+    slots = jnp.arange(W)
+    abs_pos = pos - jnp.mod(pos - slots, W)
+    mask = jnp.where(abs_pos >= 0, 0.0, -jnp.inf).astype(jnp.float32)
+    mask = mask[None, None, None, :]
+    out = _gqa_scores_out(cfg, q, ck.astype(cd), cv.astype(cd), mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)), ck, cv
+
+
+def decode_attention_stacked(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,          # [B, 1, D]
+    buf_k: jax.Array,      # [L?, B, S|W, Hkv, Dh] stacked (idx given) or unstacked
+    buf_v: jax.Array,
+    idx,                   # scan layer index into the stacked dim, or None
+    pos: jax.Array,        # absolute position of the new token
+    *,
+    local: bool,
+):
+    """One decode step writing the new K/V **directly into the (stacked)
+    cache buffer** — the write region is a single token, so XLA aliases the
+    multi-GB buffer in place across the layer scan instead of copying it.
+
+    Global attention masks keys beyond `pos`; local attention uses a rotating
+    window buffer (slot = pos % W) with absolute-position masking.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    q, k, v = _project_qkv(cfg, p, x)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k = rope(k, pos[None], cfg.rope_theta)
+
+    W = buf_k.shape[2] if idx is not None else buf_k.shape[1]
+    write_pos = jnp.mod(pos, W) if local else pos
+    kw = k.astype(buf_k.dtype)
+    vw = v.astype(buf_v.dtype)
+    if idx is not None:
+        buf_k = jax.lax.dynamic_update_slice(
+            buf_k, kw[None], (idx, 0, write_pos, 0, 0))
+        buf_v = jax.lax.dynamic_update_slice(
+            buf_v, vw[None], (idx, 0, write_pos, 0, 0))
+        ck = jax.lax.dynamic_index_in_dim(buf_k, idx, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(buf_v, idx, 0, keepdims=False)
+    else:
+        buf_k = jax.lax.dynamic_update_slice(buf_k, kw, (0, write_pos, 0, 0))
+        buf_v = jax.lax.dynamic_update_slice(buf_v, vw, (0, write_pos, 0, 0))
+        ck, cv = buf_k, buf_v
+
+    slots = jnp.arange(W)
+    if local:
+        abs_pos = pos - jnp.mod(pos - slots, W)
+        ok = abs_pos >= 0
+    else:
+        ok = slots <= pos
+    mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[None, None, None]
+    out = _gqa_scores_out(cfg, q, ck.astype(cd), cv.astype(cd), mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return out, buf_k, buf_v
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,            # [B, S, D] queries (text stream)
+    cross_kv: jax.Array,     # [B, N, D] stub modality embeddings
+) -> jax.Array:
+    """Gated cross-attention (flamingo-style: tanh(gate) starts at 0)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    q, k, v = _project_qkv(cfg, p, x, xkv=cross_kv)
+    B, S = x.shape[0], x.shape[1]
+    N = cross_kv.shape[1]
+    mask = jnp.zeros((1, 1, S, N), dtype=jnp.float32)
+    out = _gqa_scores_out(cfg, q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return out * jnp.tanh(p["gate"].astype(cd))
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    if cfg.act in ("swiglu", "geglu"):
+        g = xc @ p["w_gate"].astype(cd)
+        u = xc @ p["w_up"].astype(cd)
+        g = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        return (g * u) @ p["w_down"].astype(cd)
+    h = jax.nn.gelu(xc @ p["w_up"].astype(cd))
+    return h @ p["w_down"].astype(cd)

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded grouped dispatch.
+
+Tokens are split into ``num_groups`` groups (aligned with the mesh's data
+shards so dispatch stays device-local); each group scatters its tokens into
+per-expert capacity buffers (`at[].add` — static shapes, dry-run safe, and
+O(T*k*D) memory instead of the O(T*E*C) one-hot dispatch tensor of the
+classic GShard einsum formulation). The buffer tensor is sharded
+[groups->data, experts->model], so GSPMD emits the expert-parallel all-to-all
+at the group<->expert resharding boundary.
+
+arctic-480b's ``dense_residual`` adds the architecture's parallel dense FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.autoshard import hint, setting
+from repro.models import layers
+from repro.models.params import PSpec
+
+_DP = ("pod", "data")  # combined data-parallel axes for the group dim
+
+
+def _expert_axis():
+    # training: experts over `model` (EP in the TP axis); serving: experts
+    # over `data` (weight-stationary, expert_ff stays on `model`).
+    return setting("moe_expert_axis", "model")
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    sp = {
+        "router": PSpec((d, e), ("embed", "experts")),
+        "w_gate": PSpec((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_up": PSpec((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_down": PSpec((e, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if m.dense_residual:
+        sp["dense"] = layers.mlp_specs(cfg)
+    return sp
+
+
+def moe_ffn(
+    cfg: ModelConfig, p: dict, x: jax.Array, *, num_groups: int = 1
+) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], router aux loss scalar f32)."""
+    m = cfg.moe
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S, D = x.shape
+    T = B * S
+    G = num_groups
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    xt = hint(x.reshape(G, Tg, D).astype(cd), _DP, None, None)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xt, p["router"].astype(cd)
+    ).astype(jnp.float32)
+    logits = hint(logits, _DP, None, None)
+    probs = jax.nn.softmax(logits, axis=-1)                     # [G,Tg,E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)       # [G,Tg,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balance loss: E * sum_e mean(probs_e) * mean(top1==e).
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], m.n_experts), axis=(0, 1)
+    )
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+
+    C = max(1, int(round(Tg * m.top_k * m.capacity_factor / m.n_experts)))
+
+    # Position of each (token, k) slot inside its expert's buffer, per group.
+    sel = jax.nn.one_hot(expert_idx, m.n_experts, dtype=jnp.int32)  # [G,Tg,k,E]
+    flat = sel.reshape(G, Tg * m.top_k, m.n_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat                           # [G,Tk,E]
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, Tg, m.top_k)      # [G,Tg,k]
+    keep = pos < C
+    w = jnp.where(keep, gate_vals, 0.0).astype(cd)                  # [G,Tg,k]
+    # Dropped slots scatter into a discard row (index C, sliced off below).
+    pos_c = jnp.where(keep, pos, C)
+
+    def dispatch_one(xg, eidx, posg, keepg):
+        # xg: [Tg,D], eidx/posg/keepg: [Tg,k] -> buffers [E, C+1, D]
+        buf = jnp.zeros((m.n_experts, C + 1, D), dtype=cd)
+        xk = xg[:, None, :] * keepg[..., None]   # raw tokens (kept slots only)
+        return buf.at[eidx, posg].add(xk)
+
+    buffers = jax.vmap(dispatch_one)(xt, expert_idx, pos_c, keep.astype(cd))
+    # Dispatch happened group-local (buffers sharded over G=DP); the expert
+    # einsums want the expert axis sharded — this hint boundary IS the
+    # all-to-all GSPMD emits.
+    ea = _expert_axis()
+    g_axis = None if ea == "data" else _DP
+    buffers = hint(buffers[:, :, :C, :], g_axis, ea, None, None)
+
+    # Expert FFN over [G, E, C, D] buffers (weights shared across groups).
+    g_ = jnp.einsum("gecd,edf->gecf", buffers, p["w_gate"].astype(cd))
+    act = jax.nn.silu(g_) if cfg.act == "swiglu" else jax.nn.gelu(g_)
+    if "w_up" in p:
+        u = jnp.einsum("gecd,edf->gecf", buffers, p["w_up"].astype(cd))
+        act = act * u
+    ex_out = jnp.einsum("gecf,efd->gecd", act, p["w_down"].astype(cd))
+    ex_out = hint(ex_out, g_axis, ea, None, None)
+
+    def combine_one(bufg, eidx, posg, wg):
+        # bufg: [E,C,D] -> out [Tg, D]: gate-weighted sum of expert outputs.
+        got = bufg[eidx, jnp.minimum(posg, C - 1)]   # [Tg,k,D]
+        return jnp.sum(got * wg[..., None], axis=1)
+
+    out = jax.vmap(combine_one)(ex_out, expert_idx, pos_c, w)
+
+    if m.dense_residual:
+        out = out + layers.mlp(cfg, p["dense"], xt)
+    return out.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,97 @@
+"""Parameter specification trees.
+
+Every model is declared once as a tree of :class:`PSpec` (shape + logical axis
+names + initializer). From that single declaration we derive:
+
+* real parameters (`materialize`) for smoke tests / small-scale training,
+* `jax.ShapeDtypeStruct`s (`abstract`) for the 512-device dry-run — no
+  allocation ever happens for the full-size configs,
+* `NamedSharding`s (`distributed.sharding.build_shardings`) by mapping logical
+  axes through the parallelism rules.
+
+This keeps shapes, initializers and sharding in lock-step — the usual failure
+mode of hand-written sharding tables drifting from the model code is
+structurally impossible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]   # logical axis per dim, e.g. ("vocab","embed")
+    init: str = "normal"              # normal | zeros | ones | scaled | conv
+    scale: float = 1.0                # stddev multiplier / fan-in override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def tree_map_specs(fn: Callable[[PSpec], Any], tree):
+    """Map over a nested dict-of-PSpec tree."""
+    if isinstance(tree, PSpec):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: tree_map_specs(fn, v) for k, v in tree.items()}
+    raise TypeError(f"unexpected node {type(tree)}")
+
+
+def stack_specs(tree, n: int, axis_name: Optional[str] = None):
+    """Add a leading stacked-layers dim of size n to every spec (for lax.scan)."""
+    return tree_map_specs(
+        lambda s: PSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        tree,
+    )
+
+
+def abstract(tree, dtype) -> Any:
+    """ShapeDtypeStructs — the dry-run's zero-allocation parameter stand-ins."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree
+    )
+
+
+def _init_one(spec: PSpec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "normal":
+        # fan-in scaled normal over the first axis (or only axis).
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[0], 1)
+        std = spec.scale / math.sqrt(fan_in)
+        return std * jax.random.normal(key, spec.shape, dtype)
+    if spec.init == "scaled":
+        return spec.scale * jax.random.normal(key, spec.shape, dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def materialize(tree, key: jax.Array, dtype) -> Any:
+    """Real parameters (deterministic per-path keys: stable across refactors)."""
+
+    def walk(node, path):
+        if isinstance(node, PSpec):
+            k = jax.random.fold_in(key, hash(path) % (2**31))
+            return _init_one(node, k, dtype)
+        return {k: walk(v, path + (k,)) for k, v in node.items()}
+
+    return walk(tree, ())
+
+
+def count_params(tree) -> int:
+    total = 0
+
+    def add(s: PSpec):
+        nonlocal total
+        total += int(np.prod(s.shape))
+
+    tree_map_specs(add, tree)
+    return total

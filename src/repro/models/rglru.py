@@ -1,0 +1,130 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma)  [arXiv:2402.19427].
+
+The recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)  is a
+diagonal linear recurrence, so full sequences run as a `jax.lax.associative_
+scan` (log-depth on TPU) and decode carries a [B, lru_width] state. Gates are
+block-diagonal linear maps (RecurrentGemma's `block_width` heads).
+
+Block layout (Griffin "recurrent block"): the residual branch splits into a
+GeLU gate branch and a conv1d(4) -> RG-LRU branch, merged multiplicatively
+and projected back to d_model.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+
+_C_SCALE = 8.0  # Griffin's fixed recurrence sharpness c
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model         # lru_width (recurrentgemma: == d_model)
+    nb = cfg.n_heads                    # gate block count
+    return di, nb, di // nb, s.d_conv
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nb, bw, dc = _dims(cfg)
+    return {
+        "w_gate_branch": PSpec((d, di), ("embed", "inner")),
+        "w_rec_branch": PSpec((d, di), ("embed", "inner")),
+        "conv_w": PSpec((dc, di), ("conv", "inner"), "scaled", 0.1),
+        "conv_b": PSpec((di,), ("inner",), "zeros"),
+        # block-diagonal input/recurrence gates
+        "w_a": PSpec((nb, bw, bw), ("ssm_heads", None, None)),
+        "b_a": PSpec((di,), ("inner",), "zeros"),
+        "w_x": PSpec((nb, bw, bw), ("ssm_heads", None, None)),
+        "b_x": PSpec((di,), ("inner",), "zeros"),
+        # softplus-parameterised Lambda, init so a^c ~ U[0.9, 0.999]-ish
+        "lambda_p": PSpec((di,), ("inner",), "ones"),
+        "w_out": PSpec((di, d), ("inner", "embed")),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array     # [B, di] recurrent state
+    conv: jax.Array  # [B, d_conv-1, di] conv tail
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    di, _, _, dc = _dims(cfg)
+    return RGLRUState(
+        h=jnp.zeros((batch, di), dtype),
+        conv=jnp.zeros((batch, dc - 1, di), dtype),
+    )
+
+
+def _block_linear(w, b, x):
+    """Block-diagonal linear: x [ ..., di] with w [nb, bw, bw]."""
+    nb, bw, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bw))
+    out = jnp.einsum("...nb,nbc->...nc", xs, w.astype(x.dtype))
+    return out.reshape(x.shape) + b.astype(x.dtype)
+
+
+def _gates(cfg, p, xr):
+    """Recurrence gate a_t (log-space) and gated input. xr: [..., di] f32."""
+    r = jax.nn.sigmoid(_block_linear(p["w_a"], p["b_a"], xr))
+    i = jax.nn.sigmoid(_block_linear(p["w_x"], p["b_x"], xr))
+    # a = sigmoid(lambda)^(c*r)  -> log a = -c * r * softplus(lambda_p)
+    log_a = -_C_SCALE * r * jax.nn.softplus(p["lambda_p"].astype(xr.dtype))
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xr)
+    return a, gated_x
+
+
+def _causal_conv(cfg, p, x, tail=None):
+    dc = cfg.ssm.d_conv
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+        for i in range(dc)
+    ) + p["conv_b"].astype(x.dtype)
+    return out, xp[:, xp.shape[1] - (dc - 1) :, :]
+
+
+def rglru_forward(cfg: ModelConfig, p: dict, xin: jax.Array) -> jax.Array:
+    """Full-sequence recurrent block. xin: [B, S, D] -> [B, S, D]."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = xin.astype(cd)
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(cd))
+    rec = x @ p["w_rec_branch"].astype(cd)
+    rec, _ = _causal_conv(cfg, p, rec)
+
+    a, gx = _gates(cfg, p, rec.astype(jnp.float32))
+    # h_t = a_t h_{t-1} + gx_t  — associative over the sequence axis.
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    out = (h.astype(cd) * gate) @ p["w_out"].astype(cd)
+    return out
+
+
+def rglru_decode_step(
+    cfg: ModelConfig, p: dict, xin: jax.Array, state: RGLRUState
+) -> tuple[jax.Array, RGLRUState]:
+    """One-token decode. xin: [B, 1, D]."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = xin.astype(cd)
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(cd))
+    rec = x @ p["w_rec_branch"].astype(cd)
+    rec, new_tail = _causal_conv(cfg, p, rec, tail=state.conv)
+
+    a, gx = _gates(cfg, p, rec[:, 0].astype(jnp.float32))
+    h = a * state.h + gx                                   # [B, di]
+    out = (h[:, None, :].astype(cd) * gate) @ p["w_out"].astype(cd)
+    return out, RGLRUState(h=h, conv=new_tail.astype(state.conv.dtype))

@@ -1,0 +1,79 @@
+"""Modality-frontend stubs + input specs per (arch x shape).
+
+Per the brief, [vlm]/[audio] archs specify the transformer BACKBONE only; the
+frontend (vision encoder / EnCodec) is a stub that supplies precomputed
+patch/frame embeddings. `input_specs` returns ShapeDtypeStructs (weak-type
+correct, shardable, zero allocation) for the dry-run; `synthetic_batch`
+returns concrete arrays of the same structure for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for one dry-run cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    if shape.kind == "train":
+        batch: dict = {}
+        if cfg.embeds_input:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cd)
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "vlm":
+            batch["cross_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_cross_tokens, cfg.d_model), cd
+            )
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embeds_input:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cd)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "vlm":
+            batch["cross_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_cross_tokens, cfg.d_model), cd
+            )
+        return batch
+
+    if shape.kind == "decode":
+        batch = {"pos": jax.ShapeDtypeStruct((), i32)}
+        if cfg.embeds_input:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cd)
+        else:
+            batch["token"] = jax.ShapeDtypeStruct((B, 1), i32)
+        batch["cache"] = transformer.cache_struct(cfg, B, S)
+        return batch
+
+    raise ValueError(shape.kind)
+
+
+def synthetic_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Concrete random inputs matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    rng = np.random.default_rng(seed)
+
+    def fill(s):
+        if s.dtype == jnp.int32:
+            if s.shape == ():
+                return jnp.int32(min(7, shape.seq_len - 1))
+            hi = cfg.vocab_size if cfg.vocab_size > 0 else 2
+            return jnp.asarray(rng.integers(0, hi, s.shape), dtype=jnp.int32)
+        return jnp.asarray(
+            0.02 * rng.standard_normal(s.shape), dtype=s.dtype
+        )
+
+    return jax.tree.map(
+        fill, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )

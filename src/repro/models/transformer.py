@@ -1,0 +1,570 @@
+"""Pattern-based decoder stacks for all assigned architectures.
+
+A model is `n_layers` of per-kind blocks (GLOBAL/LOCAL/CROSS attention,
+RGLRU, SSD) described by `cfg.layer_pattern`. Identical super-blocks (one
+repetition of the pattern) are **stacked and scanned** (`jax.lax.scan`), so
+HLO size — and therefore 512-device dry-run compile time and real multi-pod
+compile time — is O(pattern) instead of O(depth). Pattern remainders are
+unrolled.
+
+Three temporal modes:
+  forward     — full sequence (training, and the prefill_32k dry-run shape)
+  prefill     — forward + KV/state cache construction (serving)
+  decode_step — one token against the cache (decode_32k / long_500k shapes)
+
+Sliding-window layers keep **window-sized rotating caches** (slot = pos %
+window), so gemma3-1b's long_500k cell stores 512-token caches for local
+layers instead of 524288-token ones.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    CROSS, GLOBAL, LOCAL, RGLRU, SSD, ModelConfig,
+)
+from repro.distributed.autoshard import hint
+from repro.models import layers, moe, rglru, ssm
+from repro.models.params import PSpec, stack_specs
+
+# Residual-stream sharding: batch over DP axes, sequence over `model`
+# (Megatron-style sequence parallelism — elementwise/norm work stays SP,
+# GSPMD inserts the gather/scatter around attention/MoE). No-op without an
+# active mesh; dims that don't divide fall back to replication.
+_DP = ("pod", "data")
+
+
+def _shard_stream(x: jax.Array) -> jax.Array:
+    if x.ndim == 3:
+        return hint(x, _DP, "model", None)
+    return x
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg: ModelConfig, kind: str) -> dict:
+    if kind in (GLOBAL, LOCAL):
+        ffn = moe.moe_specs(cfg) if cfg.moe is not None else layers.mlp_specs(cfg)
+        return {
+            "ln1": layers.norm_specs(cfg),
+            "attn": layers.attention_specs(cfg),
+            "ln2": layers.norm_specs(cfg),
+            "ffn": ffn,
+        }
+    if kind == CROSS:
+        # Gated cross-attention layer (llama-3.2-vision style insertion).
+        return {
+            "ln1": layers.norm_specs(cfg),
+            "xattn": layers.attention_specs(cfg, gated=True),
+            "ln2": layers.norm_specs(cfg),
+            "ffn": layers.mlp_specs(cfg),
+            "ffn_gate": PSpec((), (), "zeros"),
+        }
+    if kind == RGLRU:
+        return {
+            "ln1": layers.norm_specs(cfg),
+            "rec": rglru.rglru_specs(cfg),
+            "ln2": layers.norm_specs(cfg),
+            "ffn": layers.mlp_specs(cfg),
+        }
+    if kind == SSD:
+        return {"ln1": layers.norm_specs(cfg), "mamba": ssm.ssd_specs(cfg)}
+    raise ValueError(kind)
+
+
+def _pattern_split(cfg: ModelConfig) -> tuple[int, int]:
+    P = len(cfg.layer_pattern)
+    return cfg.n_layers // P, cfg.n_layers % P
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    n_super, n_rem = _pattern_split(cfg)
+    sp: dict = {}
+    if not cfg.embeds_input:
+        sp["embed"] = PSpec((v, d), ("vocab", "embed"), "scaled", 0.02)
+    if n_super > 0:
+        sp["blocks"] = {
+            f"pos{i}": stack_specs(block_specs(cfg, k), n_super, "layers")
+            for i, k in enumerate(cfg.layer_pattern)
+        }
+    if n_rem:
+        sp["rem"] = {
+            f"rem{i}": block_specs(cfg, cfg.layer_pattern[i])
+            for i in range(n_rem)
+        }
+    sp["final_norm"] = layers.norm_specs(cfg)
+    if not cfg.tie_embeddings:
+        sp["head"] = PSpec((d, v), ("embed", "vocab"), "scaled", 0.02)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill logits)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg, kind, p, x, cross_embeds, num_groups):
+    """One layer. Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind in (GLOBAL, LOCAL):
+        w = cfg.sliding_window if kind == LOCAL else None
+        x = x + layers.self_attention(cfg, p["attn"],
+                                      layers.norm(cfg, p["ln1"], x), window=w)
+        h = layers.norm(cfg, p["ln2"], x)
+        if cfg.moe is not None:
+            f, aux = moe.moe_ffn(cfg, p["ffn"], h, num_groups=num_groups)
+        else:
+            f = layers.mlp(cfg, p["ffn"], h)
+        x = x + f
+    elif kind == CROSS:
+        if cross_embeds is None:
+            raise ValueError("CROSS layer requires cross_embeds")
+        x = x + layers.cross_attention(
+            cfg, p["xattn"], layers.norm(cfg, p["ln1"], x), cross_embeds
+        )
+        h = layers.norm(cfg, p["ln2"], x)
+        x = x + layers.mlp(cfg, p["ffn"], h) * jnp.tanh(
+            p["ffn_gate"].astype(x.dtype)
+        )
+    elif kind == RGLRU:
+        x = x + rglru.rglru_forward(cfg, p["rec"], layers.norm(cfg, p["ln1"], x))
+        x = x + layers.mlp(cfg, p["ffn"], layers.norm(cfg, p["ln2"], x))
+    elif kind == SSD:
+        x = x + ssm.ssd_forward(cfg, p["mamba"], layers.norm(cfg, p["ln1"], x))
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def embed_inputs(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.embeds_input:
+        return batch["embeds"].astype(cd)
+    return params["embed"].astype(cd)[batch["tokens"]]
+
+
+def unembed(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = layers.norm(cfg, params["final_norm"], x)
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    *,
+    num_groups: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. batch: {tokens|embeds, cross_embeds?}.
+
+    Returns (logits [B,S,V] f32, aux_loss scalar).
+    """
+    x = embed_inputs(cfg, params, batch)
+    cross = batch.get("cross_embeds")
+    if cross is not None:
+        cross = cross.astype(x.dtype)
+    n_super, n_rem = _pattern_split(cfg)
+    aux_total = jnp.float32(0.0)
+
+    if n_super > 0:
+        def super_block(h, blk):
+            aux = jnp.float32(0.0)
+            h = _shard_stream(h)
+            for i, kind in enumerate(cfg.layer_pattern):
+                h, a = _apply_block(cfg, kind, blk[f"pos{i}"], h, cross,
+                                    num_groups)
+                aux = aux + a
+            return _shard_stream(h), aux
+
+        body = _maybe_remat(cfg, super_block)
+        x, auxes = jax.lax.scan(lambda h, blk: body(h, blk), x, params["blocks"])
+        aux_total = aux_total + jnp.sum(auxes)
+
+    for i in range(n_rem):
+        x, a = _apply_block(
+            cfg, cfg.layer_pattern[i], params["rem"][f"rem{i}"], x, cross,
+            num_groups,
+        )
+        aux_total = aux_total + a
+    x = _shard_stream(x)
+
+    return unembed(cfg, params, x), aux_total
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    *,
+    num_groups: int = 1,
+) -> tuple[jax.Array, dict]:
+    """Next-token (or provided-labels) cross-entropy + router aux."""
+    logits, aux = forward(cfg, params, batch, num_groups=num_groups)
+    if "labels" in batch:
+        labels = batch["labels"]
+        valid = jnp.ones(labels.shape, dtype=jnp.float32)
+    else:
+        labels = batch["tokens"][:, 1:]
+        logits = logits[:, :-1]
+        valid = jnp.ones(labels.shape, dtype=jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - gold) * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Cache + decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_struct(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    """Abstract cache shapes for one layer (concrete zeros built by caller)."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    if kind == GLOBAL:
+        return {
+            "k": jax.ShapeDtypeStruct((batch, max_seq, hkv, dh), cd),
+            "v": jax.ShapeDtypeStruct((batch, max_seq, hkv, dh), cd),
+        }
+    if kind == LOCAL:
+        w = min(cfg.sliding_window, max_seq)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, w, hkv, dh), cd),
+            "v": jax.ShapeDtypeStruct((batch, w, hkv, dh), cd),
+        }
+    if kind == CROSS:
+        n = max(cfg.n_cross_tokens, 1)
+        return {
+            "ck": jax.ShapeDtypeStruct((batch, n, hkv, dh), cd),
+            "cv": jax.ShapeDtypeStruct((batch, n, hkv, dh), cd),
+        }
+    if kind == RGLRU:
+        di = cfg.ssm.expand * cfg.d_model
+        dc = cfg.ssm.d_conv
+        return {
+            "h": jax.ShapeDtypeStruct((batch, di), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, dc - 1, di), cd),
+        }
+    if kind == SSD:
+        di = cfg.ssm.expand * cfg.d_model
+        nh = di // cfg.ssm.head_dim
+        ds, dc = cfg.ssm.d_state, cfg.ssm.d_conv
+        return {
+            "h": jax.ShapeDtypeStruct((batch, nh, cfg.ssm.head_dim, ds),
+                                      jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, dc - 1, di + 2 * ds), cd),
+        }
+    raise ValueError(kind)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Abstract cache tree (ShapeDtypeStructs) matching params structure."""
+    n_super, n_rem = _pattern_split(cfg)
+    out: dict = {}
+    if n_super > 0:
+        out["blocks"] = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            leaf = _layer_cache_struct(cfg, kind, batch, max_seq)
+            out["blocks"][f"pos{i}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_super,) + s.shape, s.dtype),
+                leaf,
+            )
+    if n_rem:
+        out["rem"] = {
+            f"rem{i}": _layer_cache_struct(cfg, cfg.layer_pattern[i], batch,
+                                           max_seq)
+            for i in range(n_rem)
+        }
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_struct(cfg, batch, max_seq),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _decode_block(cfg, kind, p, x, cache, pos, cross_embeds, idx=None,
+                  num_groups=1):
+    """One layer, one token. ``cache`` leaves may carry a stacked leading
+    layer dim (idx selects the layer — updates go straight into the stacked
+    buffer so the scan carry aliases in place). Returns (x, new_cache)."""
+
+    def read(leaf):
+        if idx is None:
+            return leaf
+        return jax.lax.dynamic_index_in_dim(leaf, idx, 0, keepdims=False)
+
+    def write(buf, new):
+        if idx is None:
+            return new
+        return jax.lax.dynamic_update_index_in_dim(
+            buf, new.astype(buf.dtype), idx, 0)
+
+    if kind in (GLOBAL, LOCAL):
+        h = layers.norm(cfg, p["ln1"], x)
+        a, ck, cv = layers.decode_attention_stacked(
+            cfg, p["attn"], h, cache["k"], cache["v"], idx, pos,
+            local=(kind == LOCAL),
+        )
+        x = x + a
+        h2 = layers.norm(cfg, p["ln2"], x)
+        if cfg.moe is not None:
+            f, _ = moe.moe_ffn(cfg, p["ffn"], h2, num_groups=num_groups)
+        else:
+            f = layers.mlp(cfg, p["ffn"], h2)
+        return x + f, {"k": ck, "v": cv}
+    if kind == CROSS:
+        ck, cv = read(cache["ck"]), read(cache["cv"])
+        h = layers.norm(cfg, p["ln1"], x)
+        cd = jnp.dtype(cfg.compute_dtype)
+        # cross K/V were projected at prefill; attend directly (read-only).
+        q = jnp.einsum("bsd,dhk->bshk", h.astype(cd), p["xattn"]["wq"].astype(cd))
+        if "bq" in p["xattn"]:
+            q = q + p["xattn"]["bq"].astype(cd)
+        mask = jnp.zeros((1, 1, 1, ck.shape[1]), jnp.float32)
+        out = layers._gqa_scores_out(cfg, q, ck.astype(cd), cv.astype(cd),
+                                     mask)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["xattn"]["wo"].astype(cd))
+        x = x + out * jnp.tanh(p["xattn"]["gate"].astype(cd))
+        h2 = layers.norm(cfg, p["ln2"], x)
+        x = x + layers.mlp(cfg, p["ffn"], h2) * jnp.tanh(
+            p["ffn_gate"].astype(cd)
+        )
+        return x, cache
+    if kind == RGLRU:
+        st = rglru.RGLRUState(h=read(cache["h"]), conv=read(cache["conv"]))
+        out, st = rglru.rglru_decode_step(
+            cfg, p["rec"], layers.norm(cfg, p["ln1"], x), st
+        )
+        x = x + out
+        x = x + layers.mlp(cfg, p["ffn"], layers.norm(cfg, p["ln2"], x))
+        return x, {"h": write(cache["h"], st.h),
+                   "conv": write(cache["conv"], st.conv)}
+    if kind == SSD:
+        st = ssm.SSDState(h=read(cache["h"]), conv=read(cache["conv"]))
+        out, st = ssm.ssd_decode_step(
+            cfg, p["mamba"], layers.norm(cfg, p["ln1"], x), st
+        )
+        return x + out, {"h": write(cache["h"], st.h),
+                         "conv": write(cache["conv"], st.conv)}
+    raise ValueError(kind)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,     # {token: [B,1] i32 | embeds: [B,1,D], pos: scalar i32}
+    cache: dict,
+) -> tuple[jax.Array, dict]:
+    """One decode step for the whole stack. Returns (logits [B,V], cache)."""
+    pos = batch["pos"]
+    if cfg.embeds_input:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = params["embed"].astype(jnp.dtype(cfg.compute_dtype))[batch["token"]]
+    cross = None  # cross K/V live in the cache during decode
+    n_super, n_rem = _pattern_split(cfg)
+    new_cache: dict = {}
+
+    if n_super > 0:
+        # The stacked cache rides the scan CARRY (sliced/updated in place per
+        # layer) rather than xs/ys — XLA aliases carry buffers across while
+        # iterations, so the multi-GB cache is never copied per step.
+        def body(carry, xs):
+            h, cch = carry
+            blk, idx = xs
+            for i, kind in enumerate(cfg.layer_pattern):
+                cch = dict(cch)
+                h, cch[f"pos{i}"] = _decode_block(
+                    cfg, kind, blk[f"pos{i}"], h, cch[f"pos{i}"], pos,
+                    cross, idx=idx,
+                )
+            return (h, cch), None
+
+        idxs = jnp.arange(n_super, dtype=jnp.int32)
+        (x, nc), _ = jax.lax.scan(
+            body, (x, cache["blocks"]), (params["blocks"], idxs)
+        )
+        new_cache["blocks"] = nc
+
+    if n_rem:
+        new_cache["rem"] = {}
+        for i in range(n_rem):
+            kind = cfg.layer_pattern[i]
+            x, c = _decode_block(cfg, kind, params["rem"][f"rem{i}"], x,
+                                 cache["rem"][f"rem{i}"], pos, cross)
+            new_cache["rem"][f"rem{i}"] = c
+
+    logits = unembed(cfg, params, x)[:, 0, :]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + cache construction
+# ---------------------------------------------------------------------------
+
+
+def _prefill_block(cfg, kind, p, x, pos0, cross_embeds, batch_size, max_seq):
+    """Layer forward that also emits its decode cache."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    if kind in (GLOBAL, LOCAL):
+        w = cfg.sliding_window if kind == LOCAL else None
+        h = layers.norm(cfg, p["ln1"], x)
+        S = h.shape[1]
+        q, k, v = layers._project_qkv(cfg, p["attn"], h)
+        pos = jnp.arange(S)
+        q = layers.rope(q, pos, cfg.rope_theta)
+        k = layers.rope(k, pos, cfg.rope_theta)
+        a = layers.gqa_attention(cfg, q, k, v, window=w)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"].astype(cd))
+        h2 = layers.norm(cfg, p["ln2"], x)
+        if cfg.moe is not None:
+            f, _ = moe.moe_ffn(cfg, p["ffn"], h2, num_groups=1)
+        else:
+            f = layers.mlp(cfg, p["ffn"], h2)
+        x = x + f
+        if kind == GLOBAL:
+            kv_hint = ((_DP, "model", None, None) if max_seq >= 4096
+                       else (_DP, None, None, "model"))
+            ck = jnp.zeros((batch_size, max_seq) + k.shape[2:], cd)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(cd), (0, 0, 0, 0))
+            cv = jnp.zeros((batch_size, max_seq) + v.shape[2:], cd)
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cd), (0, 0, 0, 0))
+            ck, cv = hint(ck, *kv_hint), hint(cv, *kv_hint)
+        else:
+            W = min(cfg.sliding_window, max_seq)
+            # last W entries, placed at their rotating slots (abs % W)
+            kw, vw = k[:, -W:], v[:, -W:]
+            slots = jnp.mod(jnp.arange(S)[-W:] if S >= W
+                            else jnp.arange(S), W)
+            ck = jnp.zeros((batch_size, W) + k.shape[2:], cd)
+            cv = jnp.zeros((batch_size, W) + v.shape[2:], cd)
+            ck = ck.at[:, slots].set(kw.astype(cd))
+            cv = cv.at[:, slots].set(vw.astype(cd))
+        return x, {"k": ck, "v": cv}
+    if kind == CROSS:
+        h = layers.norm(cfg, p["ln1"], x)
+        x = x + layers.cross_attention(cfg, p["xattn"], h, cross_embeds)
+        h2 = layers.norm(cfg, p["ln2"], x)
+        x = x + layers.mlp(cfg, p["ffn"], h2) * jnp.tanh(
+            p["ffn_gate"].astype(cd)
+        )
+        _, ck, cv = layers._project_qkv(cfg, p["xattn"], x, xkv=cross_embeds)
+        return x, {"ck": ck.astype(cd), "cv": cv.astype(cd)}
+    if kind == RGLRU:
+        # run full-seq then recompute final state via a short decode replay of
+        # the last d_conv tokens for the conv tail + a full scan for h.
+        h_in = layers.norm(cfg, p["ln1"], x)
+        out = rglru.rglru_forward(cfg, p["rec"], h_in)
+        x = x + out
+        x = x + layers.mlp(cfg, p["ffn"], layers.norm(cfg, p["ln2"], x))
+        st = _rglru_final_state(cfg, p["rec"], h_in)
+        return x, {"h": st.h, "conv": st.conv}
+    if kind == SSD:
+        h_in = layers.norm(cfg, p["ln1"], x)
+        x = x + ssm.ssd_forward(cfg, p["mamba"], h_in)
+        st = _ssd_final_state(cfg, p["mamba"], h_in)
+        return x, {"h": st.h, "conv": st.conv}
+    raise ValueError(kind)
+
+
+def _rglru_final_state(cfg, p, xin):
+    """Final (h, conv tail) after consuming xin — for prefill->decode handoff."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = xin.astype(cd)
+    rec = x @ p["w_rec_branch"].astype(cd)
+    rec_c, tail = rglru._causal_conv(cfg, p, rec)
+    a, gx = rglru._gates(cfg, p, rec_c.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return rglru.RGLRUState(h=h[:, -1], conv=tail)
+
+
+def _ssd_final_state(cfg, p, xin):
+    """Final SSD state after consuming xin (chunked state recurrence)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    di = cfg.ssm.expand * cfg.d_model
+    nh = di // cfg.ssm.head_dim
+    ds = cfg.ssm.d_state
+    B_, S, _ = xin.shape
+    zxbcdt = xin.astype(cd) @ p["in_proj"].astype(cd)
+    _, x, Bmat, Cmat, dt = ssm._split_proj(cfg, zxbcdt)
+    xbc, tail = ssm._causal_conv(
+        cfg, p, jnp.concatenate([x, Bmat, Cmat], axis=-1)
+    )
+    x, Bmat, _ = jnp.split(xbc, [di, di + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dA = dt * A[None, None, :]
+    seg = jnp.cumsum(dA, axis=1)
+    decay_to_end = jnp.exp(seg[:, -1:, :] - seg)
+    xh = x.reshape(B_, S, nh, cfg.ssm.head_dim).astype(jnp.float32)
+    h = jnp.einsum("bts,bth,bth,bthd->bhds",
+                   Bmat.astype(jnp.float32), dt, decay_to_end, xh)
+    return ssm.SSDState(h=h, conv=tail.astype(jnp.float32))
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    max_seq: int,
+) -> tuple[jax.Array, dict]:
+    """Consume the prompt; return (last-position logits [B,V], decode cache)."""
+    x = embed_inputs(cfg, params, batch)
+    B = x.shape[0]
+    cross = batch.get("cross_embeds")
+    if cross is not None:
+        cross = cross.astype(x.dtype)
+    n_super, n_rem = _pattern_split(cfg)
+    cache: dict = {}
+
+    if n_super > 0:
+        def body(h, blk):
+            cs = {}
+            h = _shard_stream(h)
+            for i, kind in enumerate(cfg.layer_pattern):
+                h, c = _prefill_block(cfg, kind, blk[f"pos{i}"], h, 0, cross,
+                                      B, max_seq)
+                cs[f"pos{i}"] = c
+            return _shard_stream(h), cs
+
+        x, cs = jax.lax.scan(body, x, params["blocks"])
+        cache["blocks"] = cs
+
+    if n_rem:
+        cache["rem"] = {}
+        for i in range(n_rem):
+            kind = cfg.layer_pattern[i]
+            x, c = _prefill_block(cfg, kind, params["rem"][f"rem{i}"], x, 0,
+                                  cross, B, max_seq)
+            cache["rem"][f"rem{i}"] = c
+
+    logits = unembed(cfg, params, x)[:, -1, :]
+    return logits, cache

@@ -1,0 +1,1 @@
+"""Roofline analysis: HLO collective extraction + three-term model."""

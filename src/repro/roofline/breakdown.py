@@ -1,0 +1,57 @@
+"""Per-cell hotspot breakdown for the §Perf hypothesis loop.
+
+Usage: PYTHONPATH=src python -m repro.roofline.breakdown <hlo_file> <n_dev>
+Prints top traffic instructions (with loop multipliers), top collectives,
+and dot-flops — the dry-run 'profile' this CPU-only environment offers.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+
+from repro.roofline import hlo_cost as H
+
+
+def breakdown(path: str, n_dev: int, top: int = 14):
+    text = open(path).read()
+    comps = H.parse_module(text)
+    mult, material = H._multipliers(comps)
+    traffic = defaultdict(float)
+    coll = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0 or cname not in material:
+            continue
+        for ins in comp.instrs:
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if ins.op.endswith("-done") or base in H._NO_TRAFFIC or base in (
+                    "while", "conditional"):
+                continue
+            rb = H._shape_bytes(ins.type_text)
+            ob = sum(H._shape_bytes(comp.shapes[o])
+                     for o in re.findall(r"%([\w.-]+)", ins.rest)[:8]
+                     if o in comp.shapes)
+            t = m * (rb + ob)
+            meta = re.search(r'op_name="([^"]+)"', ins.rest)
+            tag = (meta.group(1).split("/")[-1] if meta else base)[:40]
+            traffic[(base, ins.type_text[:44], tag)] += t
+            if base in H._COLL:
+                g = H._group_size(ins.rest, n_dev)
+                coll[(base, ins.type_text[:44], tag)] += m * H._wire_factor(
+                    base, g, rb)
+
+    print("== traffic hotspots (bytes x loop multipliers) ==")
+    for k, v in sorted(traffic.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{v/1e9:9.2f} GB  {k[0]:18s} {k[1]:46s} {k[2]}")
+    print("== collective hotspots (wire bytes) ==")
+    for k, v in sorted(coll.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{v/1e9:9.2f} GB  {k[0]:18s} {k[1]:46s} {k[2]}")
+    c = H.analyze(text, n_dev)
+    print(f"== totals: dot_flops={c.dot_flops:.3e} traffic={c.traffic_bytes/1e9:.1f}GB "
+          f"wire={c.total_wire_bytes/1e9:.2f}GB ==")
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], int(sys.argv[2]),
+              int(sys.argv[3]) if len(sys.argv) > 3 else 14)

@@ -1,0 +1,294 @@
+"""Trip-count-aware cost extraction from optimized (post-SPMD) HLO text.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE — for
+scan-over-layers programs that undercounts FLOPs/bytes/collectives by the
+layer count. This module parses the HLO module structure:
+
+  * computations + their instructions (with result/operand shapes),
+  * while-loop trip counts (from the `compare(ind_var, constant)` in each
+    condition computation — scans lower to exactly that form),
+  * a multiplier map (product of enclosing loop trip counts),
+
+and produces corrected per-device totals:
+
+  * `dot_flops`   — 2 x prod(result dims) x prod(contracting dims) per dot,
+  * `traffic_bytes` — Σ (operand + result bytes) per top-level instruction
+    (tensor-granularity HBM traffic; on-chip fusion reuse already folded in
+    because fusions count as single instructions),
+  * collective wire bytes by op (ring-algorithm factors x replica-group size).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY )?%?([\w.-]+)\s*\(.*\)\s*->\s*.+\{\s*$"
+)
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w.-]+)\s*=\s*((?:\([^)]*\)|[^=]+?))\s*"
+    r"([\w-]+)\((.*)$"
+)
+_PARAM_DECL = re.compile(r"%?([\w.-]+):\s*((?:\([^)]*\)|[\w\[\]{},]+))")
+
+_NO_TRAFFIC = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "reshape",  # layout-preserving reshape is free on TPU
+}
+_COLL = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute"}
+
+
+def _dims(shape_text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt in _BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _dims(shape_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_text: str
+    op: str
+    rest: str  # operand list + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: dict  # value name -> type text (params + results)
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                hdr_params = line.split("(", 1)[1].rsplit(")", 1)[0]
+                for pname, ptype in _PARAM_DECL.findall(hdr_params):
+                    cur.shapes[pname] = ptype
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_text, op, rest = m.groups()
+            cur.instrs.append(Instr(name, type_text.strip(), op, rest))
+            cur.shapes[name] = type_text.strip()
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(ins: Instr, comps: dict) -> int:
+    """XLA annotates `backend_config={"known_trip_count":{"n":"N"}}`; fall
+    back to parsing the condition's compare-with-constant."""
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.rest)
+    if m:
+        return max(1, int(m.group(1)))
+    cond = re.search(r"condition=%?([\w.-]+)", ins.rest)
+    if cond and cond.group(1) in comps:
+        cc = comps[cond.group(1)]
+        consts = {}
+        for i2 in cc.instrs:
+            if i2.op == "constant":
+                mm = re.match(r"(-?\d+)", i2.rest.rstrip(") ,"))
+                if mm and "[]" in i2.type_text:
+                    consts[i2.name] = int(mm.group(1))
+        for i2 in cc.instrs:
+            if i2.op == "compare" and ("direction=LT" in i2.rest
+                                       or "direction=GT" in i2.rest):
+                for o in re.findall(r"%([\w.-]+)",
+                                    i2.rest.split("direction")[0]):
+                    if o in consts:
+                        return max(1, consts[o])
+    return 1
+
+
+def _multipliers(comps: dict) -> tuple[dict, set]:
+    """Returns (computation -> product of enclosing trip counts,
+    set of 'material' computations: entry + while bodies/conds + branches —
+    anything NOT reached purely through fusion `calls=`/`to_apply=`)."""
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name:
+            entry = name
+    if entry is None:
+        entry = list(comps)[-1]
+
+    mult = defaultdict(float)
+    material: set = set()
+
+    def visit(name: str, m: float, is_material: bool):
+        if name not in comps:
+            return
+        again = mult[name] < m or (is_material and name not in material)
+        if not again:
+            return
+        mult[name] = max(mult[name], m)
+        if is_material:
+            material.add(name)
+        comp = comps[name]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trip = _trip_count(ins, comps)
+                body = re.search(r"body=%?([\w.-]+)", ins.rest)
+                cond = re.search(r"condition=%?([\w.-]+)", ins.rest)
+                if body:
+                    visit(body.group(1), m * trip, is_material)
+                if cond:
+                    visit(cond.group(1), m * (trip + 1), is_material)
+            elif ins.op == "conditional":
+                for br in re.findall(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations)=\{?%?([\w.,% -]+)", ins.rest):
+                    for b in re.findall(r"[\w.-]+", br):
+                        visit(b, m, is_material)
+            else:
+                for attr in ("calls", "to_apply"):
+                    mm = re.search(rf"{attr}=%?([\w.-]+)", ins.rest)
+                    if mm:
+                        visit(mm.group(1), m, False)
+
+    visit(entry, 1.0, True)
+    return mult, material
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    """2 x prod(result) x prod(contracting dims of lhs)."""
+    out_elems = 1
+    for _, dims in _dims(ins.type_text):
+        for d in dims:
+            out_elems *= d
+    operand_part = ins.rest.split(")")[0]
+    ops = re.findall(r"%([\w.-]+)", operand_part)
+    lhs_dims = _dims(comp.shapes.get(ops[0], "")) if ops else []
+    lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    k = 1
+    if lc and lhs_dims:
+        dims = lhs_dims[0][1]
+        for idx in (int(i) for i in lc.group(1).split(",") if i):
+            if idx < len(dims):
+                k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if m:
+        first = m.group(1).strip()
+        return len(first.split(",")) if first else default
+    return default
+
+
+def _wire_factor(op: str, g: int, rb: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g * rb
+    if op == "all-gather":
+        return (g - 1) / g * rb
+    if op == "reduce-scatter":
+        return float((g - 1) * rb)
+    if op == "all-to-all":
+        return (g - 1) / g * rb
+    if op == "collective-permute":
+        return float(rb)
+    return float(rb)
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float
+    traffic_bytes: float
+    wire_bytes_by_op: dict
+    count_by_op: dict
+    n_while: int
+    multiplier_max: float
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes_by_op.values())
+
+
+def analyze(text: str, n_devices: int) -> HloCost:
+    comps = parse_module(text)
+    mult, material = _multipliers(comps)
+
+    flops = 0.0
+    traffic = 0.0
+    wire = defaultdict(float)
+    counts = defaultdict(float)
+    n_while = 0
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue  # unreachable (e.g. dead fusions)
+        fusion_like = cname not in material
+        for ins in comp.instrs:
+            base = ins.op
+            if base.endswith("-start"):
+                base = base[: -len("-start")]
+            if base.endswith("-done"):
+                continue
+            if base == "while":
+                n_while += 1
+            if base == "dot" and not fusion_like:
+                flops += m * _dot_flops(comp, ins)
+            if base in _COLL and not fusion_like:
+                rb = _shape_bytes(ins.type_text)
+                g = _group_size(ins.rest, n_devices)
+                wire[base] += m * _wire_factor(base, g, rb)
+                counts[base] += m
+            if fusion_like or base in _NO_TRAFFIC or base in ("while",
+                                                              "conditional"):
+                continue
+            # tensor-granularity traffic: result + operands
+            rb = _shape_bytes(ins.type_text)
+            ob = 0
+            for oname in re.findall(r"%([\w.-]+)", ins.rest)[:8]:
+                if oname in comp.shapes:
+                    ob += _shape_bytes(comp.shapes[oname])
+            traffic += m * (rb + ob)
+
+    return HloCost(
+        dot_flops=flops,
+        traffic_bytes=traffic,
+        wire_bytes_by_op=dict(wire),
+        count_by_op=dict(counts),
+        n_while=n_while,
+        multiplier_max=max(mult.values()) if mult else 1.0,
+    )

@@ -1,0 +1,119 @@
+"""Extract collective traffic from optimized (post-SPMD) HLO text.
+
+`compiled.cost_analysis()` has FLOPs and memory bytes but NOT collective
+bytes; we parse `compiled.as_text()` and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+tracking replica-group sizes so the roofline model can apply per-algorithm
+wire-byte factors (ring AG/RS move (g-1)/g x bytes, AR moves 2(g-1)/g, A2A
+moves (g-1)/g of the shard, permute moves the shard once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# e.g.:  %all-reduce.5 = f32[4,128]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\([^=]*\)|[\w\[\]{},. ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum sizes of all `dtype[a,b,...]` shapes in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    """Replica-group size from `replica_groups={{0,1,..},{..}}` or
+    `replica_groups=[8,64]<=[512]` (iota) forms."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        first = m.group(1).strip()
+        return len(first.split(",")) if first else default
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # op -> total result bytes (logical, per device program)
+    bytes_by_op: dict
+    count_by_op: dict
+    # op -> sum over instances of bytes * wire-factor(group)
+    wire_bytes_by_op: dict
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes_by_op.values())
+
+
+def _wire_factor(op: str, g: int, result_bytes: int) -> float:
+    """Bytes a device actually sends on the wire per ring algorithms."""
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g * result_bytes
+    if op == "all-gather":
+        # result is the gathered tensor; each device contributes 1/g of it
+        return (g - 1) / g * result_bytes
+    if op == "reduce-scatter":
+        # result is the scattered shard (input/g); ring sends (g-1)/g x input
+        return float((g - 1) * result_bytes)
+    if op == "all-to-all":
+        return (g - 1) / g * result_bytes
+    if op == "collective-permute":
+        return float(result_bytes)
+    return float(result_bytes)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    bytes_by_op: dict = defaultdict(int)
+    count_by_op: dict = defaultdict(int)
+    wire_by_op: dict = defaultdict(float)
+
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # count start ops only for async pairs
+        op = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(op)[0]
+        rb = _shape_bytes(lhs)
+        g = _group_size(line, n_devices)
+        bytes_by_op[op] += rb
+        count_by_op[op] += 1
+        wire_by_op[op] += _wire_factor(op, g, rb)
+
+    return CollectiveStats(
+        bytes_by_op=dict(bytes_by_op),
+        count_by_op=dict(count_by_op),
+        wire_bytes_by_op=dict(wire_by_op),
+    )

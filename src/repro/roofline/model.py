@@ -1,0 +1,219 @@
+"""Three-term roofline model over the dry-run artifacts.
+
+Terms (per device, TPU v5e constants):
+  compute    = FLOPs / 197e12            (bf16 peak)
+  memory     = bytes / 819e9             (HBM bandwidth)
+  collective = wire bytes / 50e9         (ICI per-link, per the brief)
+
+FLOPs / bytes / wire bytes come from the trip-count-corrected HLO cost model
+(`hlo_cost.analyze`) over the saved optimized HLO — `cost_analysis()` alone
+undercounts scanned layers. MODEL_FLOPS is the analytic useful compute
+(6·N·D train / 2·N_active·tokens serve); its ratio to HLO dot FLOPs exposes
+remat/replication waste.
+
+Caveat recorded per cell: the CPU backend legalizes bf16 dots via f32
+upcasts, inflating `traffic`/memory vs a real TPU lowering; numbers are
+upper bounds for serve cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Optional
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.roofline import hlo_cost
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (brief: collective term denominator)
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    fits_16g: bool
+    mem_gib: float
+    # per-device
+    hlo_flops: float
+    traffic_bytes: float
+    wire_bytes: float
+    model_flops_device: float
+    # seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    model_bytes_device: float = 0.0  # minimal bytes/step (params + caches)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """useful FLOPs / HLO dot FLOPs, clamped to [0, 1] (SSM decode cells
+        lower to elementwise ops — no dots — so the raw ratio is unbounded)."""
+        return self.model_flops_device / max(self.hlo_flops,
+                                             self.model_flops_device, 1.0)
+
+    @property
+    def is_decode(self) -> bool:
+        return self.shape in ("decode_32k", "long_500k")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term bound spent on irreducible work.
+
+        Train/prefill: useful-compute time / dominant bound (MFU-like).
+        Decode: useful-bytes time / dominant bound — decode is inherently
+        memory-bound (one full pass over weights+cache per token); the
+        meaningful roofline is bytes, not FLOPs.
+        """
+        if self.is_decode:
+            t_useful = self.model_bytes_device / HBM_BW
+        else:
+            t_useful = self.model_flops_device / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / max(t_bound, 1e-30)
+
+
+def model_bytes(arch: str, shape_name: str, n_devices: int) -> float:
+    """Minimal per-device HBM bytes per serve step: bf16 active params read
+    once + the KV/state cache read once (+ the one-token write, negligible)."""
+    import jax
+    import numpy as np
+
+    from repro.models import transformer
+
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind != "decode":
+        return 0.0
+    params_b = 2.0 * cfg.active_param_count()
+    cache = transformer.cache_struct(cfg, shape.global_batch, shape.seq_len)
+    cache_b = sum(
+        float(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(cache)
+    )
+    return (params_b + cache_b) / n_devices
+
+
+def model_flops(arch: str, shape_name: str, n_devices: int) -> float:
+    """Analytic useful FLOPs per device per step."""
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def improvement_hint(c: CellRoofline) -> str:
+    if c.dominant == "collective":
+        return ("cut cross-device bytes: bf16 collectives, fuse/batch "
+                "gathers, or reshard to keep the hot loop local")
+    if c.dominant == "memory":
+        if c.useful_ratio < 0.5:
+            return ("HLO moves >2x useful bytes: fuse the offending op chain "
+                    "(kernel) or remove replicated/select-DUS traffic")
+        return "raise arithmetic intensity: larger microbatch/chunk, fusion"
+    if c.useful_ratio < 0.5:
+        return "compute is replicated or rematerialised: check shardings/remat"
+    return "near compute bound: only kernel-level MXU utilisation remains"
+
+
+def analyze_cell(json_path: str) -> Optional[CellRoofline]:
+    with open(json_path) as f:
+        r = json.load(f)
+    if r.get("status") != "ok":
+        return None
+    hlo_path = json_path.replace(".json", ".hlo.txt")
+    if os.path.exists(hlo_path):
+        with open(hlo_path) as f:
+            cost = hlo_cost.analyze(f.read(), r["n_devices"])
+        flops = cost.dot_flops
+        traffic = cost.traffic_bytes
+        wire = cost.total_wire_bytes
+    else:  # fall back to (undercounted) XLA numbers
+        flops = r["cost"].get("flops", 0.0)
+        traffic = r["cost"].get("bytes accessed", 0.0)
+        wire = r["collectives"]["total_wire_bytes"]
+
+    mem = r["memory"]
+    mem_bytes = mem.get("argument_size_in_bytes", 0) + mem.get(
+        "temp_size_in_bytes", 0)
+    mf = model_flops(r["arch"], r["shape"], r["n_devices"])
+    mb = model_bytes(r["arch"], r["shape"], r["n_devices"])
+    return CellRoofline(
+        model_bytes_device=mb,
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        n_devices=r["n_devices"],
+        fits_16g=mem_bytes < 16 * 2**30,
+        mem_gib=mem_bytes / 2**30,
+        hlo_flops=flops,
+        traffic_bytes=traffic,
+        wire_bytes=wire,
+        model_flops_device=mf,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=traffic / HBM_BW,
+        t_collective=wire / LINK_BW,
+    )
+
+
+def analyze_dir(art_dir: str) -> list:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        c = analyze_cell(p)
+        if c is not None:
+            cells.append(c)
+    return cells
+
+
+def markdown_table(cells: list) -> str:
+    hdr = ("| arch | shape | mesh | mem GiB (fits) | compute s | memory s | "
+           "collective s | dominant | useful/HLO | roofline frac | next lever |")
+    sep = "|" + "---|" * 11
+    rows = [hdr, sep]
+    for c in cells:
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | "
+            f"{c.mem_gib:.1f} ({'Y' if c.fits_16g else 'N'}) | "
+            f"{c.t_compute:.3e} | {c.t_memory:.3e} | {c.t_collective:.3e} | "
+            f"{c.dominant} | {c.useful_ratio:.2f} | "
+            f"{c.roofline_fraction:.3f} | {improvement_hint(c)} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "../../../artifacts/dryrun"))
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    cells = analyze_dir(os.path.abspath(args.dir))
+    print(markdown_table(cells))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([dataclasses.asdict(c) for c in cells], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + decode with a persistent KV/state cache.
+
+A deliberately small, production-shaped loop: fixed batch slots, prompt
+prefill, greedy/temperature decode steps, per-slot stop handling. The jitted
+step functions are the same ones the dry-run lowers for the decode_32k /
+long_500k cells, so serving-path performance work transfers 1:1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_seq: int = 512
+    batch_slots: int = 4
+    temperature: float = 0.0     # 0 => greedy
+    eos_id: int = -1             # -1 => never stops early
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
+                 seed: int = 0):
+        self.cfg, self.params, self.ec = cfg, params, ec
+        self._key = jax.random.PRNGKey(seed)
+
+        @partial(jax.jit, static_argnums=())
+        def _prefill(params, batch):
+            return transformer.prefill(cfg, params, batch, ec.max_seq)
+
+        @jax.jit
+        def _decode(params, batch, cache):
+            return transformer.decode_step(cfg, params, batch, cache)
+
+        self._prefill_fn = _prefill
+        self._decode_fn = _decode
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.ec.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(
+            k, logits / self.ec.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(
+        self,
+        prompts: np.ndarray,   # [B, S0] int32 (right-aligned, same length)
+        max_new: int,
+    ) -> np.ndarray:
+        """Greedy/temperature generation for a batch of equal-length prompts."""
+        B, S0 = prompts.shape
+        assert B == self.ec.batch_slots
+        assert S0 + max_new <= self.ec.max_seq
+        batch = {"tokens": jnp.asarray(prompts, dtype=jnp.int32)}
+        logits, cache = self._prefill_fn(self.params, batch)
+        out = []
+        tok = self._sample(logits)
+        out.append(np.asarray(tok))
+        for i in range(1, max_new):
+            step_batch = {"token": tok[:, None], "pos": jnp.int32(S0 + i - 1)}
+            logits, cache = self._decode_fn(self.params, step_batch, cache)
+            tok = self._sample(logits)
+            out.append(np.asarray(tok))
+        seq = np.stack(out, axis=1)   # [B, max_new]
+        if self.ec.eos_id >= 0:
+            # trim after first EOS per row (host-side post-processing)
+            for b in range(B):
+                hits = np.where(seq[b] == self.ec.eos_id)[0]
+                if len(hits):
+                    seq[b, hits[0] + 1:] = self.ec.eos_id
+        return seq

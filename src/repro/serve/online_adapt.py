@@ -1,0 +1,79 @@
+"""The paper's Fig-3 online-learning FSM generalized to LM serving.
+
+offline train -> accuracy analysis -> [serve + interleaved online updates ->
+periodic re-analysis] — with the paper's §5.3.2 mitigation policy: if
+analysis accuracy (here: eval loss) degrades past a threshold, roll back to
+the last good checkpoint and optionally re-train. This is the TM
+architecture's learning-management subsystem applied to any arch in
+`repro.configs` (DESIGN.md §4: what transfers to every architecture).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.train import checkpoint as ckpt_mod
+from repro.train import train_step as ts_mod
+
+
+@dataclasses.dataclass
+class OnlineAdaptConfig:
+    analyze_every: int = 8          # online updates between accuracy analyses
+    rollback_threshold: float = 0.25  # relative eval-loss degradation
+    checkpoint_dir: str = "/tmp/repro_online_adapt"
+
+
+class OnlineAdaptManager:
+    """Host FSM; device work stays in two jitted functions (update / eval)."""
+
+    def __init__(self, cfg: ModelConfig, tc: ts_mod.TrainConfig,
+                 state: ts_mod.TrainState, oc: OnlineAdaptConfig):
+        self.cfg, self.tc, self.oc = cfg, tc, oc
+        self.state = state
+        self._update = jax.jit(
+            lambda s, b: ts_mod.train_step(cfg, tc, s, b))
+        self._eval = jax.jit(
+            lambda p, b: transformer.loss_fn(cfg, p, b)[0])
+        self.history: list = []       # (step, eval_loss)
+        self.rollbacks = 0
+        self._steps = 0
+        self._best: Optional[float] = None
+
+    def analyze(self, eval_batch: dict) -> float:
+        loss = float(jax.device_get(
+            self._eval(self.state.params, eval_batch)))
+        self.history.append((self._steps, loss))
+        return loss
+
+    def offline_train(self, batches, eval_batch: dict) -> float:
+        for b in batches:
+            self.state, _ = self._update(self.state, b)
+            self._steps += 1
+        loss = self.analyze(eval_batch)
+        self._best = loss
+        ckpt_mod.save(self.oc.checkpoint_dir, self._steps, self.state)
+        return loss
+
+    def online_step(self, batch: dict, eval_batch: dict) -> Optional[float]:
+        """One labelled online update; periodic analysis + rollback policy."""
+        self.state, _ = self._update(self.state, batch)
+        self._steps += 1
+        if self._steps % self.oc.analyze_every:
+            return None
+        loss = self.analyze(eval_batch)
+        if self._best is not None and loss > self._best * (
+                1.0 + self.oc.rollback_threshold):
+            # §5.3.2: accuracy collapsed — restore the known-good state.
+            self.state, _ = ckpt_mod.restore(
+                self.oc.checkpoint_dir, self.state)
+            self.rollbacks += 1
+        elif self._best is None or loss < self._best:
+            self._best = loss
+            ckpt_mod.save(self.oc.checkpoint_dir, self._steps, self.state)
+        return loss

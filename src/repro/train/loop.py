@@ -1,0 +1,118 @@
+"""Fault-tolerant training driver.
+
+The paper's runtime-management posture (accuracy watchdog -> retrain from a
+known-good state; §5.3.2) generalized to the LM trainer:
+
+* periodic **atomic checkpoints** + resume-from-latest on (re)start,
+* a **health watchdog**: non-finite loss or a per-step deadline breach is a
+  fault event — the step is logged, and after `max_faults` consecutive events
+  the driver restores the last checkpoint (the TM's "retrain on-chip from the
+  offline set" maps to "restore + continue"),
+* **straggler watch**: steps slower than `straggler_factor` x the running
+  median are recorded (on a real pod this feeds the scheduler; here the
+  control path is identical, the signal is wall-time),
+* optional elastic restart: `resume(mesh)` re-places the checkpoint under a
+  *different* mesh via reshard-on-load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt_mod
+from repro.train.train_step import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    step_deadline_s: float = 120.0
+    straggler_factor: float = 2.0
+    max_faults: int = 3
+
+
+@dataclasses.dataclass
+class LoopReport:
+    steps_run: int = 0
+    losses: list = dataclasses.field(default_factory=list)
+    fault_events: list = dataclasses.field(default_factory=list)
+    straggler_steps: list = dataclasses.field(default_factory=list)
+    restores: int = 0
+
+
+def run(
+    lc: LoopConfig,
+    state: TrainState,
+    step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]],
+    data_iter,
+    *,
+    shardings=None,
+    log_every: int = 10,
+    log: Callable[[str], None] = print,
+) -> tuple[TrainState, LoopReport]:
+    report = LoopReport()
+    durations: list[float] = []
+    consecutive_faults = 0
+
+    start_step = int(jax.device_get(state.opt.step))
+    last_good = start_step
+
+    for step in range(start_step, lc.total_steps):
+        batch = next(data_iter)
+        t0 = time.monotonic()
+        new_state, metrics = step_fn(state, batch)
+        loss = float(jax.device_get(metrics["loss"]))
+        dt = time.monotonic() - t0
+
+        healthy = np.isfinite(loss) and dt <= lc.step_deadline_s
+        if durations and dt > lc.straggler_factor * float(np.median(durations)):
+            report.straggler_steps.append((step, dt))
+        durations.append(dt)
+
+        if not healthy:
+            reason = "nan_loss" if not np.isfinite(loss) else "deadline"
+            report.fault_events.append((step, reason, dt))
+            consecutive_faults += 1
+            log(f"[fault] step {step}: {reason} ({dt:.1f}s) "
+                f"({consecutive_faults}/{lc.max_faults})")
+            if consecutive_faults >= lc.max_faults:
+                log(f"[fault] restoring last good checkpoint @ {last_good}")
+                tree, _ = ckpt_mod.restore(
+                    lc.checkpoint_dir, state, shardings=shardings
+                )
+                state = tree
+                report.restores += 1
+                consecutive_faults = 0
+            continue  # skip the bad update
+
+        consecutive_faults = 0
+        state = new_state
+        report.steps_run += 1
+        report.losses.append(loss)
+
+        if step % log_every == 0:
+            log(f"step {step}: loss={loss:.4f} ({dt:.2f}s)")
+        if (step + 1) % lc.checkpoint_every == 0:
+            ckpt_mod.save(lc.checkpoint_dir, step + 1, state, keep=lc.keep)
+            last_good = step + 1
+
+    return state, report
+
+
+def resume_or_init(
+    lc: LoopConfig, init_state: TrainState, *, shardings=None
+) -> TrainState:
+    """Restore the latest checkpoint if present (restart path), else init."""
+    step = ckpt_mod.latest_step(lc.checkpoint_dir)
+    if step is None:
+        return init_state
+    tree, _ = ckpt_mod.restore(lc.checkpoint_dir, init_state,
+                               shardings=shardings)
+    return tree

@@ -1,0 +1,110 @@
+"""Hand-rolled optimizers (no optax in this environment): AdamW + SGD,
+cosine/linear-warmup schedules, global-norm clipping.
+
+Optimizer state mirrors the parameter tree, so it inherits parameter
+shardings (ZeRO: FSDP-sharded params => FSDP-sharded moments for free).
+Moment dtype is configurable per arch (`ModelConfig.adam_dtype`) — arctic's
+480B params keep bf16 moments to fit v5e HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"     # cosine | linear | constant
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any        # first moment (or momentum for sgd)
+    nu: Any        # second moment (adamw only; zeros tree for sgd)
+
+
+def init(cfg: OptConfig, params) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return OptState(step=jnp.int32(0), mu=zeros,
+                    nu=jax.tree.map(jnp.zeros_like, zeros))
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def apply(cfg: OptConfig, state: OptState, params, grads):
+    """One update. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = schedule_lr(cfg, state.step)
+    t = (state.step + 1).astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    if cfg.name == "sgd":
+        new_mu = jax.tree.map(
+            lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                          + g.astype(jnp.float32)).astype(mdt),
+            state.mu, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params, new_mu)
+        return new_params, OptState(state.step + 1, new_mu, state.nu), {
+            "lr": lr, "grad_norm": gnorm}
+
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        step_ = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step_ + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, OptState(state.step + 1, new_mu, new_nu), {
+        "lr": lr, "grad_norm": gnorm}

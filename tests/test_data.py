@@ -1,0 +1,93 @@
+"""Data subsystems: iris booleanization, block CV, filter, ring buffer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import blocks, buffer, filter as filt, iris, memory
+
+
+def test_iris_shape_and_balance():
+    xs, ys = iris.load()
+    assert xs.shape == (150, 16) and xs.dtype == bool
+    assert list(np.bincount(ys)) == [50, 50, 50]
+
+
+def test_thermometer_monotone():
+    """Thermometer code: higher bit set => all lower bits set."""
+    xs, _ = iris.load()
+    b = xs.reshape(150, 4, 4)
+    for k in range(3):
+        assert np.all(b[:, :, k] >= b[:, :, k + 1])
+
+
+def test_orderings_are_permutations():
+    o = blocks.all_orderings(5)
+    assert o.shape == (120, 5)
+    assert np.all(np.sort(o, axis=1) == np.arange(5))
+    sub = blocks.select_orderings(5, 10, seed=1)
+    assert sub.shape == (10, 5)
+    assert len({tuple(r) for r in sub}) == 10
+
+
+def test_sets_partition_dataset():
+    """Every ordering's 3 sets must partition the 150 rows exactly."""
+    sets, spec = blocks.iris_paper_sets(n_orderings=6)
+    xs, ys = iris.load()
+    assert spec.sizes() == (30, 60, 60)
+    for o in range(6):
+        rows = np.concatenate(
+            [sets.offline_x[o], sets.validation_x[o], sets.online_x[o]]
+        )
+        # sort rows of both and compare as multisets
+        a = np.sort(rows.view(np.uint8).reshape(150, -1), axis=0)
+        b = np.sort(xs.view(np.uint8).reshape(150, -1), axis=0)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_class_filter_mask():
+    ys = jnp.asarray([0, 1, 2, 1, 0])
+    m = filt.class_filter_mask(ys, jnp.int32(1), jnp.bool_(True))
+    np.testing.assert_array_equal(np.asarray(m), [True, False, True, False, True])
+    m_off = filt.class_filter_mask(ys, jnp.int32(1), jnp.bool_(False))
+    assert bool(jnp.all(m_off))
+
+
+def test_limit_mask():
+    m = filt.limit_mask(30, jnp.int32(20))
+    assert int(jnp.sum(m)) == 20 and bool(m[19]) and not bool(m[20])
+
+
+def test_ring_buffer_fifo():
+    buf = buffer.make(4, 3)
+    xs = [jnp.asarray([i % 2, 1, 0], dtype=bool) for i in range(5)]
+    for i in range(4):
+        buf, ok = buffer.push(buf, xs[i], jnp.int32(i))
+        assert bool(ok)
+    buf, ok = buffer.push(buf, xs[4], jnp.int32(4))
+    assert not bool(ok)  # full -> reject (backpressure)
+    got = []
+    for _ in range(5):
+        buf, x, y, valid = buffer.pop(buf)
+        if bool(valid):
+            got.append(int(y))
+    assert got == [0, 1, 2, 3]  # FIFO order, nothing dropped silently
+
+
+def test_ring_buffer_wraparound():
+    buf = buffer.make(2, 1)
+    on = jnp.asarray([1], dtype=bool)
+    for round_ in range(3):
+        buf, ok = buffer.push(buf, on, jnp.int32(10 + round_))
+        assert bool(ok)
+        buf, x, y, valid = buffer.pop(buf)
+        assert bool(valid) and int(y) == 10 + round_
+    assert int(buf.size) == 0
+
+
+def test_rom_source_cycles():
+    xs = np.eye(3, dtype=bool)
+    ys = np.arange(3, dtype=np.int32)
+    src = memory.ROMSource(xs, ys)
+    seen = [src.next_row()[1] for _ in range(7)]
+    assert seen == [0, 1, 2, 0, 1, 2, 0]

@@ -1,0 +1,101 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle.
+
+Shape/dtype sweeps + bit-exactness, per the kernel contract in DESIGN.md §8.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (1, 2, 5),      # degenerate
+    (3, 16, 32),    # the paper's iris machine
+    (2, 6, 17),     # non-aligned everything
+    (10, 100, 200), # MNIST-ish TM
+    (4, 33, 129),   # one over tile boundaries
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("training", [True, False])
+def test_clause_eval_matches_ref(shape, training):
+    C, J, L = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    include = jnp.asarray(rng.random((C, J, L)) < 0.3)
+    lits = jnp.asarray(rng.random((L,)) < 0.5)
+    want = ref.clause_eval(include, lits, training=training)
+    got = ops.clause_eval(include, lits, training=training)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_clause_eval_all_excluded_is_empty():
+    include = jnp.zeros((2, 4, 32), dtype=bool)
+    lits = jnp.ones((32,), dtype=bool)
+    assert bool(jnp.all(ops.clause_eval(include, lits, training=True)))
+    assert not bool(jnp.any(ops.clause_eval(include, lits, training=False)))
+
+
+def test_clause_eval_single_violation_kills_clause():
+    L = 32
+    include = jnp.zeros((1, 2, L), dtype=bool).at[0, 0, 7].set(True)
+    lits = jnp.ones((L,), dtype=bool).at[7].set(False)
+    out = ops.clause_eval(include, lits, training=True)
+    assert not bool(out[0, 0])  # included literal is 0 -> clause 0
+    assert bool(out[0, 1])      # empty clause in training -> 1
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("policy", ["standard", "hardware"])
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16])
+def test_feedback_matches_ref(shape, policy, dtype):
+    C, J, L = shape
+    n_states = 50 if dtype == jnp.int8 else 5000
+    rng = np.random.default_rng(hash((shape, policy)) % 2**31)
+    ta = jnp.asarray(rng.integers(1, 2 * n_states + 1, (C, J, L)), dtype=dtype)
+    lits = jnp.asarray(rng.random((L,)) < 0.5)
+    c_out = jnp.asarray(rng.random((C, J)) < 0.5)
+    t1 = jnp.asarray(rng.random((C, J)) < 0.5)
+    t2 = jnp.asarray(rng.random((C, J)) < 0.3) & ~t1
+    u = jnp.asarray(rng.random((C, J, L)), dtype=jnp.float32)
+    for boost in (True, False):
+        kw = dict(s=jnp.float32(1.375), n_states=n_states, s_policy=policy,
+                  boost_true_positive=boost)
+        want = ref.feedback_step(ta, lits, c_out, t1, t2, u, **kw)
+        got = ops.feedback_step(ta, lits, c_out, t1, t2, u, **kw)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_feedback_states_stay_in_bounds():
+    C, J, L, n = 2, 8, 32, 10
+    rng = np.random.default_rng(3)
+    ta = jnp.asarray(rng.integers(1, 2 * n + 1, (C, J, L)), dtype=jnp.int8)
+    lits = jnp.ones((L,), dtype=bool)
+    ones = jnp.ones((C, J), dtype=bool)
+    u = jnp.zeros((C, J, L), dtype=jnp.float32)  # every draw fires
+    out = ops.feedback_step(
+        ta, lits, ones, ones, jnp.zeros_like(ones), u,
+        s=jnp.float32(1.0), n_states=n, s_policy="standard",
+        boost_true_positive=True,
+    )
+    o = np.asarray(out)
+    assert o.min() >= 1 and o.max() <= 2 * n
+
+
+def test_end_to_end_backend_parity():
+    """Full TM training is bit-exact between ref and pallas backends."""
+    from repro.core import TMConfig, init_runtime, init_state, train_epochs
+    from repro.data import iris
+
+    xs, ys = iris.load()
+    key = jax.random.PRNGKey(7)
+    outs = {}
+    for backend in ("ref", "pallas"):
+        cfg = TMConfig(n_features=16, max_classes=3, max_clauses=16,
+                       n_states=50, backend=backend)
+        rt = init_runtime(cfg, s=1.375, T=15)
+        st = train_epochs(cfg, init_state(cfg), rt,
+                          jnp.asarray(xs[:30]), jnp.asarray(ys[:30]), key, 2)
+        outs[backend] = np.asarray(st.ta_state)
+    np.testing.assert_array_equal(outs["ref"], outs["pallas"])

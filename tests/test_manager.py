@@ -1,0 +1,137 @@
+"""System-operation FSM (Fig 3) + the paper's three use cases at reduced scale.
+
+These are integration tests: small ordering counts / cycles so they run in
+seconds on 1 CPU core; the full-scale runs live in benchmarks/.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TMConfig, init_runtime, init_state
+from repro.core import faults as faults_mod
+from repro.core import manager as mgr
+from repro.data import blocks
+
+CFG = TMConfig(n_features=16, max_classes=3, max_clauses=16, n_states=50)
+
+
+def _sets_for(o, sets, offline_limit=None):
+    n_off = sets.offline_x.shape[1]
+    off_valid = (
+        np.arange(n_off) < offline_limit if offline_limit is not None
+        else np.ones(n_off, dtype=bool)
+    )
+    return mgr.Sets(
+        offline_x=jnp.asarray(sets.offline_x[o]),
+        offline_y=jnp.asarray(sets.offline_y[o]),
+        offline_valid=jnp.asarray(off_valid),
+        validation_x=jnp.asarray(sets.validation_x[o]),
+        validation_y=jnp.asarray(sets.validation_y[o]),
+        validation_valid=jnp.ones(sets.validation_x.shape[1], dtype=bool),
+        online_x=jnp.asarray(sets.online_x[o]),
+        online_y=jnp.asarray(sets.online_y[o]),
+        online_valid=jnp.ones(sets.online_x.shape[1], dtype=bool),
+    )
+
+
+@pytest.fixture(scope="module")
+def iris_sets():
+    sets, _ = blocks.iris_paper_sets(n_orderings=3)
+    return sets
+
+
+def test_fig3_flow_shapes(iris_sets):
+    sys_cfg = mgr.SystemConfig(n_offline_epochs=3, n_online_cycles=4)
+    sets = _sets_for(0, iris_sets, offline_limit=20)
+    schedule = mgr.make_schedule(online_s=1.0)
+    st, accs, activity = mgr.run_system(
+        CFG, sys_cfg, init_state(CFG), init_runtime(CFG, s=1.375, T=15),
+        sets, schedule, jax.random.PRNGKey(0),
+    )
+    assert accs.shape == (5, 3) and activity.shape == (4,)
+    assert np.all(np.isfinite(np.asarray(accs)))
+    assert np.all((np.asarray(accs) >= 0) & (np.asarray(accs) <= 1))
+
+
+def test_usecase1_online_learning_improves_accuracy(iris_sets):
+    """§5.1: online learning on labelled data raises val/online accuracy."""
+    sys_cfg = mgr.SystemConfig(n_offline_epochs=10, n_online_cycles=8)
+    gains = []
+    for o in range(3):
+        sets = _sets_for(o, iris_sets, offline_limit=20)
+        st, accs, _ = mgr.run_system(
+            CFG, sys_cfg, init_state(CFG), init_runtime(CFG, s=1.375, T=15),
+            sets, mgr.make_schedule(online_s=1.0), jax.random.PRNGKey(o),
+        )
+        accs = np.asarray(accs)
+        gains.append(accs[-1, 1] - accs[0, 1])  # validation-set gain
+    assert np.mean(gains) > 0.02, f"mean val gain {np.mean(gains)}"
+
+
+def test_usecase2_class_introduction_recovers(iris_sets):
+    """§5.2: class filtered out, introduced at cycle 3; accuracy recovers."""
+    sys_cfg = mgr.SystemConfig(n_offline_epochs=10, n_online_cycles=10)
+    schedule = mgr.make_schedule(
+        online_s=1.0, filtered_class=0, introduce_at_cycle=3
+    )
+    sets = _sets_for(0, iris_sets)
+    st, accs, _ = mgr.run_system(
+        CFG, sys_cfg, init_state(CFG), init_runtime(CFG, s=1.375, T=15),
+        sets, schedule, jax.random.PRNGKey(0),
+    )
+    accs = np.asarray(accs)
+    # Pre-introduction rows measured on filtered sets; post on full sets.
+    dip = accs[4, 1]      # first analysis after introduction (cycle idx 3)
+    final = accs[-1, 1]
+    assert final >= dip - 0.02, f"no recovery: dip={dip} final={final}"
+    assert np.isfinite(accs).all()
+
+
+def test_usecase3_fault_mitigation(iris_sets):
+    """§5.3: 20% stuck-at-0 at cycle 3 — online learning recovers accuracy."""
+    sys_cfg = mgr.SystemConfig(n_offline_epochs=10, n_online_cycles=12)
+    and_m, or_m = faults_mod.even_spread_stuck_at(CFG, 0.2, 0)
+    sets = _sets_for(0, iris_sets, offline_limit=20)
+
+    def run(online_enabled):
+        schedule = mgr.make_schedule(
+            online_s=1.0, online_enabled=online_enabled,
+            fault_masks=(jnp.asarray(and_m), jnp.asarray(or_m)),
+            inject_at_cycle=3,
+        )
+        _, accs, _ = mgr.run_system(
+            CFG, sys_cfg, init_state(CFG), init_runtime(CFG, s=1.375, T=15),
+            sets, schedule, jax.random.PRNGKey(0),
+        )
+        return np.asarray(accs)
+
+    with_online = run(True)
+    without = run(False)
+    # Online learning must end at least as well as frozen-after-fault.
+    assert with_online[-1, 1] >= without[-1, 1] - 0.02
+    # The frozen system cannot improve after the fault (sanity on the harness).
+    assert np.allclose(without[5:, 1], without[5, 1])
+
+
+def test_orderings_vmap_matches_loop(iris_sets):
+    """run_orderings (vmapped CV) == per-ordering run_system loop."""
+    sys_cfg = mgr.SystemConfig(n_offline_epochs=2, n_online_cycles=2)
+    schedule = mgr.make_schedule(online_s=1.0)
+    O = 3
+    sets_list = [_sets_for(o, iris_sets, offline_limit=20) for o in range(O)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *sets_list)
+    states = jax.vmap(lambda _: init_state(CFG))(jnp.arange(O))
+    keys = jax.random.split(jax.random.PRNGKey(9), O)
+    rt = init_runtime(CFG, s=1.375, T=15)
+
+    _, accs_v, _ = mgr.run_orderings(
+        CFG, sys_cfg, states, rt, stacked, schedule, keys
+    )
+    for o in range(O):
+        _, accs_o, _ = mgr.run_system(
+            CFG, sys_cfg, init_state(CFG), rt, sets_list[o], schedule, keys[o]
+        )
+        np.testing.assert_allclose(
+            np.asarray(accs_v)[o], np.asarray(accs_o), atol=1e-6
+        )

@@ -1,0 +1,137 @@
+"""TM core behaviour: datapath, over-provisioning, faults, runtime ports."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    TMConfig, init_runtime, init_state, forward, predict_batch,
+    train_epochs, train_step,
+)
+from repro.core import accuracy as acc_mod
+from repro.core import faults as faults_mod
+from repro.data import iris
+
+
+def small_cfg(**kw):
+    d = dict(n_features=16, max_classes=3, max_clauses=16, n_states=50)
+    d.update(kw)
+    return TMConfig(**d)
+
+
+def test_init_state_boundary():
+    cfg = small_cfg()
+    st = init_state(cfg)
+    assert st.ta_state.shape == (3, 16, 32)
+    assert np.all(np.asarray(st.ta_state) == cfg.n_states)  # all-exclude start
+    st2 = init_state(cfg, jax.random.PRNGKey(0))
+    v = np.asarray(st2.ta_state)
+    assert set(np.unique(v)) <= {cfg.n_states, cfg.n_states + 1}
+
+
+def test_forward_shapes_and_empty_convention():
+    cfg = small_cfg()
+    st, rt = init_state(cfg), init_runtime(cfg)
+    x = jnp.zeros((16,), dtype=bool)
+    clauses_tr, votes_tr = forward(cfg, st, rt, x, training=True)
+    clauses_inf, votes_inf = forward(cfg, st, rt, x, training=False)
+    assert clauses_tr.shape == (3, 16) and votes_tr.shape == (3,)
+    # All-exclude init => every clause empty: 1 in training, 0 in inference.
+    assert bool(jnp.all(clauses_tr))
+    assert not bool(jnp.any(clauses_inf))
+    assert int(jnp.sum(jnp.abs(votes_tr))) == 0  # polarities cancel (8+, 8-)
+
+
+def test_clause_mask_gates_votes():
+    """Over-provisioned clauses (§3.1.1) must not vote until enabled."""
+    cfg = small_cfg()
+    st = init_state(cfg, jax.random.PRNGKey(1))
+    rt_full = init_runtime(cfg)
+    rt_half = init_runtime(cfg, n_active_clauses=8)
+    x = jnp.asarray(np.random.default_rng(0).random(16) < 0.5)
+    cl_full, _ = forward(cfg, st, rt_full, x, training=True)
+    cl_half, _ = forward(cfg, st, rt_half, x, training=True)
+    assert not bool(jnp.any(cl_half[:, 8:]))
+    np.testing.assert_array_equal(
+        np.asarray(cl_full[:, :8]), np.asarray(cl_half[:, :8])
+    )
+
+
+def test_class_mask_excludes_from_prediction():
+    cfg = small_cfg()
+    st = init_state(cfg, jax.random.PRNGKey(2))
+    rt = init_runtime(cfg, n_active_classes=2)
+    xs = jnp.asarray(np.random.default_rng(1).random((20, 16)) < 0.5)
+    preds = np.asarray(predict_batch(cfg, st, rt, xs))
+    assert preds.max() < 2  # class 2 is over-provisioned, never predicted
+
+
+def test_fault_masks_force_actions():
+    """§3.1.2: AND=0 forces action 0; OR=1 forces action 1."""
+    from repro.core import tm as tm_mod
+
+    cfg = small_cfg()
+    st = init_state(cfg, jax.random.PRNGKey(3))
+    rt = init_runtime(cfg)
+    # stuck-at-0 everywhere
+    rt0 = rt._replace(ta_and_mask=jnp.zeros_like(rt.ta_and_mask))
+    assert not bool(jnp.any(tm_mod.ta_actions(cfg, st, rt0)))
+    # stuck-at-1 everywhere
+    rt1 = rt._replace(ta_or_mask=jnp.ones_like(rt.ta_or_mask))
+    assert bool(jnp.all(tm_mod.ta_actions(cfg, st, rt1)))
+
+
+def test_even_spread_fault_fraction():
+    cfg = small_cfg()
+    and_m, or_m = faults_mod.even_spread_stuck_at(cfg, 0.2, 0)
+    frac = 1.0 - and_m.mean()
+    assert abs(frac - 0.2) < 0.01
+    assert or_m.sum() == 0
+    and_m1, or_m1 = faults_mod.even_spread_stuck_at(cfg, 0.2, 1)
+    assert and_m1.all() and abs(or_m1.mean() - 0.2) < 0.01
+
+
+def test_runtime_s_T_change_no_recompile():
+    """s/T are traced runtime ports: changing them must not retrace."""
+    cfg = small_cfg()
+    st, rt = init_state(cfg, jax.random.PRNGKey(0)), init_runtime(cfg)
+    xs, ys = iris.load()
+    x, y = jnp.asarray(xs[0]), jnp.asarray(ys[0])
+
+    traces = 0
+
+    @jax.jit
+    def step(st, rt, x, y, k):
+        nonlocal traces
+        traces += 1
+        return train_step(cfg, st, rt, x, y, k)
+
+    k = jax.random.PRNGKey(0)
+    step(st, rt, x, y, k)
+    step(st, rt._replace(s=jnp.float32(2.5), T=jnp.int32(7)), x, y, k)
+    assert traces == 1
+
+
+def test_training_learns_iris():
+    cfg = small_cfg()
+    rt = init_runtime(cfg, s=3.0, T=15)
+    xs, ys = iris.load()
+    st = train_epochs(cfg, init_state(cfg), rt, jnp.asarray(xs), jnp.asarray(ys),
+                      jax.random.PRNGKey(0), 10)
+    acc = float(acc_mod.analyze(cfg, st, rt, jnp.asarray(xs), jnp.asarray(ys)))
+    assert acc > 0.9, f"train accuracy {acc} too low"
+
+
+def test_valid_mask_rows_are_skipped():
+    """Masked rows must leave state untouched (class filter substrate)."""
+    from repro.core import train_datapoints
+
+    cfg = small_cfg()
+    rt = init_runtime(cfg, s=3.0, T=15)
+    st0 = init_state(cfg, jax.random.PRNGKey(5))
+    xs, ys = iris.load()
+    xs, ys = jnp.asarray(xs[:10]), jnp.asarray(ys[:10])
+    key = jax.random.PRNGKey(1)
+    none_valid = jnp.zeros((10,), dtype=bool)
+    st1, _ = train_datapoints(cfg, st0, rt, xs, ys, key, valid=none_valid)
+    np.testing.assert_array_equal(np.asarray(st0.ta_state), np.asarray(st1.ta_state))
