@@ -3,8 +3,9 @@
 Public surface:
   TMConfig / TMState / TMRuntime      — design-time / learnt / runtime state
   init_state / init_runtime           — constructors
-  forward / predict / predict_batch   — inference datapath
-  train_step / train_datapoints / train_epochs — learning datapath
+  forward / forward_batch / predict / predict_batch — inference datapath
+                                        (batch-first; kernels/dispatch.py)
+  train_step / train_update / train_datapoints / train_epochs — learning
   faults, accuracy, manager, online, hpsearch   — management subsystems
 """
 from repro.core.tm import (  # noqa: F401
@@ -12,6 +13,7 @@ from repro.core.tm import (  # noqa: F401
     TMRuntime,
     TMState,
     forward,
+    forward_batch,
     init_runtime,
     init_state,
     predict,
@@ -22,4 +24,5 @@ from repro.core.feedback import (  # noqa: F401
     train_datapoints,
     train_epochs,
     train_step,
+    train_update,
 )

@@ -25,8 +25,14 @@ def analyze(
     ys: jax.Array,      # [n] int32
     valid: jax.Array | None = None,
 ) -> jax.Array:
-    """Accuracy over the valid rows of a set. Scalar f32 in [0, 1]."""
-    preds = jax.vmap(lambda x: tm_mod.predict(cfg, state, rt, x))(xs)
+    """Accuracy over the valid rows of a set. Scalar f32 in [0, 1].
+
+    One batch-first pass: the whole set's clause plane is a single dispatched
+    ``clause_eval_batch`` (include bank read once), not a vmap of per-sample
+    predictions — this runs thrice per online cycle in the manager, so it is
+    the hottest inference path in the system.
+    """
+    preds = tm_mod.predict_batch_(cfg, state, rt, xs)
     ok = (preds == ys).astype(jnp.float32)
     if valid is None:
         return jnp.mean(ok)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import tm as tm_mod
 from repro.core.tm import TMConfig, TMRuntime, TMState
+from repro.kernels import dispatch
 
 
 class StepAux(NamedTuple):
@@ -79,18 +80,22 @@ def _feedback_selection(
     return type1, type2
 
 
-def train_step(
+def train_update(
     cfg: TMConfig,
     state: TMState,
     rt: TMRuntime,
     x: jax.Array,
     y: jax.Array,
     key: jax.Array,
-) -> tuple[TMState, StepAux]:
-    """One supervised datapoint: inference + feedback for all clauses/TAs.
+) -> tuple[TMState, jax.Array, jax.Array]:
+    """One supervised datapoint's TA-bank update — no monitoring pass.
 
-    This is the paper's 2-clock-cycle datapath: everything below is one fused
-    plane of (C x J x 2f) elementwise work plus two small reductions.
+    The learning half of the paper's 2-clock-cycle datapath: one fused plane
+    of (C x J x 2f) elementwise work plus two small reductions. Returns
+    (new_state, training-mode votes [C], activity scalar). Consumers that
+    want per-step inference-mode monitoring use :func:`train_step`; batched
+    consumers (``online._consume_many``) hoist monitoring out of the serial
+    scan and run it once per chunk through the batch-first clause kernel.
     """
     k_sel, k_u = jax.random.split(key)
     lits = tm_mod.make_literals(x)
@@ -104,37 +109,42 @@ def train_step(
         k_u, (cfg.max_classes, cfg.max_clauses, cfg.n_literals), dtype=jnp.float32
     )
 
-    if cfg.backend == "pallas":
-        from repro.kernels import ops as _kops
+    new_ta = dispatch.resolve(cfg.backend).feedback_step(
+        state.ta_state, lits, clauses_tr, type1, type2, u,
+        s=rt.s, n_states=cfg.n_states, s_policy=cfg.s_policy,
+        boost_true_positive=cfg.boost_true_positive,
+    )
 
-        new_ta = _kops.feedback_step(
-            state.ta_state, lits, clauses_tr, type1, type2, u,
-            s=rt.s, n_states=cfg.n_states, s_policy=cfg.s_policy,
-            boost_true_positive=cfg.boost_true_positive,
-        )
-    else:
-        from repro.kernels import ref as _kref
+    activity = jnp.mean((new_ta != state.ta_state).astype(jnp.float32))
+    return TMState(ta_state=new_ta), votes, activity
 
-        new_ta = _kref.feedback_step(
-            state.ta_state, lits, clauses_tr, type1, type2, u,
-            s=rt.s, n_states=cfg.n_states, s_policy=cfg.s_policy,
-            boost_true_positive=cfg.boost_true_positive,
-        )
+
+def train_step(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    x: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+) -> tuple[TMState, StepAux]:
+    """One supervised datapoint: inference + feedback for all clauses/TAs."""
+    new_state, votes, activity = train_update(cfg, state, rt, x, y, key)
 
     # Inference-mode prediction for monitoring (empty clauses vote 0).
+    lits = tm_mod.make_literals(x)
+    include = tm_mod.ta_actions(cfg, state, rt)
     clauses_inf = tm_mod.eval_clauses(cfg, include, lits, rt, training=False)
     votes_inf = tm_mod.class_sums(cfg, clauses_inf)
     votes_inf = jnp.where(rt.class_mask, votes_inf, jnp.iinfo(jnp.int32).min)
     pred = jnp.argmax(votes_inf).astype(jnp.int32)
 
-    activity = jnp.mean((new_ta != state.ta_state).astype(jnp.float32))
     aux = StepAux(
         votes=votes,
         predicted=pred,
         correct=(pred == y),
         activity=activity,
     )
-    return TMState(ta_state=new_ta), aux
+    return new_state, aux
 
 
 def train_datapoints(

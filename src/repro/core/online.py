@@ -9,7 +9,7 @@ jitted device steps; all device-side state is fixed-shape.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,22 +28,74 @@ class SessionState(NamedTuple):
     step: jax.Array  # int32 — online datapoints consumed
 
 
+class ChunkAux(NamedTuple):
+    """Per-chunk observability from :func:`_consume_many`."""
+
+    predicted: jax.Array  # [K] int32 — batched inference under the post-chunk state
+    correct: jax.Array    # [K] bool  — predicted == label, invalid rows False
+    valid: jax.Array      # [K] bool  — rows actually consumed
+    activity: jax.Array   # [K] f32   — per-step TA-update activity
+
+
 @partial(jax.jit, static_argnums=0)
 def _enqueue(cfg: TMConfig, ss: SessionState, x, y):
     new_buf, ok = buf_mod.push(ss.buf, x, y)
     return ss._replace(buf=new_buf), ok
 
 
-@partial(jax.jit, static_argnums=0)
-def _consume(cfg: TMConfig, ss: SessionState, rt: TMRuntime, key):
-    """Pop one buffered datapoint and apply one online training step."""
-    new_buf, x, y, valid = buf_mod.pop(ss.buf)
-    new_tm, aux = fb_mod.train_step(cfg, ss.tm, rt, x, y, key)
-    tm = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new_tm, ss.tm)
-    out = SessionState(
-        tm=tm, buf=new_buf, step=ss.step + valid.astype(jnp.int32)
+@partial(jax.jit, static_argnums=(0, 1), static_argnames=("monitor",))
+def _consume_many(
+    cfg: TMConfig,
+    k: int,                 # static chunk size (one trace per chunk size)
+    ss: SessionState,
+    rt: TMRuntime,
+    limit: jax.Array,       # traced i32 — consume at most this many rows
+    key: jax.Array,
+    *,
+    monitor: bool = True,   # static: False skips the monitoring pass (aux=None)
+) -> tuple[SessionState, jax.Array, Optional[ChunkAux]]:
+    """Drain up to ``min(k, limit, buffered)`` datapoints in ONE jitted call.
+
+    The TA updates keep the FPGA's serial row-order semantics (``lax.scan``:
+    feedback at step t sees state from t-1), but the per-datapoint
+    inference-mode monitoring that :func:`~repro.core.feedback.train_step`
+    would run inside the loop is hoisted out and done once per chunk as a
+    batch-first clause eval under the post-chunk state — the include bank is
+    read K times for learning (inherent to serial semantics) and once, not K
+    times, for monitoring.
+    """
+    limit = jnp.asarray(limit, dtype=jnp.int32)
+
+    def body(carry, inp):
+        buf, tm, n = carry
+        i, kk = inp
+        new_buf, x, y, nonempty = buf_mod.pop(buf)
+        valid = (i < limit) & nonempty
+        new_tm, _, activity = fb_mod.train_update(cfg, tm, rt, x, y, kk)
+        tm = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new_tm, tm)
+        buf = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new_buf, buf)
+        n = n + valid.astype(jnp.int32)
+        return (buf, tm, n), (x, y, valid, jnp.where(valid, activity, 0.0))
+
+    idx = jnp.arange(k, dtype=jnp.int32)
+    keys = jax.random.split(key, k)
+    (buf, tm, n), (xs, ys, valids, activity) = jax.lax.scan(
+        body, (ss.buf, ss.tm, jnp.int32(0)), (idx, keys)
     )
-    return out, valid, aux
+
+    # Hoisted monitoring: one batched inference pass over the chunk. Skipped
+    # entirely (not just discarded — a jitted return value can't be DCE'd)
+    # when the caller doesn't want it.
+    aux = None
+    if monitor:
+        preds = tm_mod.predict_batch_(cfg, tm, rt, xs)
+        aux = ChunkAux(
+            predicted=preds.astype(jnp.int32),
+            correct=(preds == ys) & valids,
+            valid=valids,
+            activity=activity,
+        )
+    return SessionState(tm=tm, buf=buf, step=ss.step + n), n, aux
 
 
 class OnlineSession:
@@ -62,10 +114,12 @@ class OnlineSession:
         rt: TMRuntime,
         *,
         buffer_capacity: int = 64,
+        chunk: int = 16,
         seed: int = 0,
     ):
         self.cfg = cfg
         self.rt = rt
+        self.chunk = max(1, min(chunk, buffer_capacity))
         self._key = jax.random.PRNGKey(seed)
         self.ss = SessionState(
             tm=state,
@@ -92,14 +146,25 @@ class OnlineSession:
         return accepted
 
     def learn_available(self, max_points: int) -> int:
-        """Consume up to ``max_points`` buffered datapoints; returns #trained."""
+        """Consume up to ``max_points`` buffered datapoints; returns #trained.
+
+        Drains in chunks of ``self.chunk`` per jitted call (one device
+        dispatch per chunk instead of one per datapoint); the final partial
+        chunk is handled by the traced ``limit`` port, so chunk size never
+        retraces.
+        """
         trained = 0
-        for _ in range(max_points):
+        while trained < max_points:
+            want = min(self.chunk, max_points - trained)
             self._key, k = jax.random.split(self._key)
-            self.ss, valid, _ = _consume(self.cfg, self.ss, self.rt, k)
-            if not bool(valid):
+            self.ss, n, _ = _consume_many(
+                self.cfg, self.chunk, self.ss, self.rt, jnp.int32(want), k,
+                monitor=False,
+            )
+            n = int(n)
+            trained += n
+            if n < want:  # buffer drained before the budget ran out
                 break
-            trained += 1
         return trained
 
     def infer(self, xs) -> np.ndarray:

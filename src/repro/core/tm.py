@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
+
 
 # ---------------------------------------------------------------------------
 # Configuration (the paper's design-time parameters, §3.1)
@@ -47,7 +49,7 @@ class TMConfig:
     n_states: int = 99               # N states per action (TA has 2N states)
     s_policy: str = "standard"       # "standard" | "hardware"  (see DESIGN.md §2)
     boost_true_positive: bool = True # deterministic strengthen on (clause=1,lit=1)
-    backend: str = "ref"             # "ref" | "pallas" clause/feedback backend
+    backend: str = "ref"             # kernel backend name (see kernels/dispatch.py)
 
     def __post_init__(self):
         if self.max_clauses % 2:
@@ -56,8 +58,11 @@ class TMConfig:
             raise ValueError("n_states must be >= 1")
         if self.s_policy not in ("standard", "hardware"):
             raise ValueError(f"unknown s_policy {self.s_policy!r}")
-        if self.backend not in ("ref", "pallas"):
-            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend not in dispatch.available():
+            raise ValueError(
+                f"unknown backend {self.backend!r}; "
+                f"available: {dispatch.available()}"
+            )
 
     @property
     def n_literals(self) -> int:
@@ -176,21 +181,39 @@ def eval_clauses(
     during training (so Type I feedback can grow them) and 0 during inference
     (standard TM convention; the paper inherits it from [5]).
     """
-    if cfg.backend == "pallas":
-        from repro.kernels import ops as _kops
-
-        out = _kops.clause_eval(include, literals, training=training)
-    else:
-        from repro.kernels import ref as _kref
-
-        out = _kref.clause_eval(include, literals, training=training)
+    out = dispatch.resolve(cfg.backend).clause_eval(
+        include, literals, training=training
+    )
     return out & rt.clause_mask[None, :]
 
 
+def eval_clauses_batch(
+    cfg: TMConfig,
+    include: jax.Array,   # [C, J, 2f] bool  (post-fault actions)
+    literals: jax.Array,  # [B, 2f] bool
+    rt: TMRuntime,
+    *,
+    training: bool,
+) -> jax.Array:
+    """Batch-first clause outputs [B, C, J] bool.
+
+    The include bank is streamed once per batch (not once per datapoint);
+    semantics are row-wise identical to :func:`eval_clauses`.
+    """
+    out = dispatch.resolve(cfg.backend).clause_eval_batch(
+        include, literals, training=training
+    )
+    return out & rt.clause_mask[None, None, :]
+
+
 def class_sums(cfg: TMConfig, clause_out: jax.Array) -> jax.Array:
-    """Per-class vote: sum of +/- polarity clause outputs. [C] int32."""
+    """Per-class vote: sum of +/- polarity clause outputs over the last axis.
+
+    clause_out [..., C, J] -> votes [..., C] int32 (works for single
+    datapoints and batch-first [B, C, J] planes alike).
+    """
     pol = clause_polarity(cfg)
-    return jnp.sum(clause_out.astype(jnp.int32) * pol[None, :], axis=-1)
+    return jnp.sum(clause_out.astype(jnp.int32) * pol, axis=-1)
 
 
 def forward(
@@ -208,6 +231,21 @@ def forward(
     return clauses, class_sums(cfg, clauses)
 
 
+def forward_batch(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    xs: jax.Array,  # [B, f] bool
+    *,
+    training: bool = False,
+):
+    """A batch through the datapath. Returns (clause_out [B,C,J], votes [B,C])."""
+    lits = make_literals(xs)
+    include = ta_actions(cfg, state, rt)
+    clauses = eval_clauses_batch(cfg, include, lits, rt, training=training)
+    return clauses, class_sums(cfg, clauses)
+
+
 def predict(cfg: TMConfig, state: TMState, rt: TMRuntime, x: jax.Array) -> jax.Array:
     """argmax class over active classes (inactive classes vote -inf)."""
     _, votes = forward(cfg, state, rt, x, training=False)
@@ -215,9 +253,23 @@ def predict(cfg: TMConfig, state: TMState, rt: TMRuntime, x: jax.Array) -> jax.A
     return jnp.argmax(votes)
 
 
+def predict_batch_(
+    cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array
+) -> jax.Array:
+    """Unjitted batch-first prediction [B] (composable inside other jits)."""
+    _, votes = forward_batch(cfg, state, rt, xs, training=False)
+    votes = jnp.where(rt.class_mask[None, :], votes, jnp.iinfo(jnp.int32).min)
+    return jnp.argmax(votes, axis=-1)
+
+
 @partial(jax.jit, static_argnums=0)
 def predict_batch(
     cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array
 ) -> jax.Array:
-    """Vectorised inference over a batch of datapoints (the serving path)."""
-    return jax.vmap(lambda x: predict(cfg, state, rt, x))(xs)
+    """Batch-first inference over a batch of datapoints (the serving path).
+
+    The clause plane for all B datapoints is one dispatched
+    ``clause_eval_batch`` call — the include bank is read once per batch —
+    rather than a vmap of per-sample :func:`predict` planes.
+    """
+    return predict_batch_(cfg, state, rt, xs)

@@ -1,7 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §8).
 
+dispatch.py    — THE backend seam: ref|pallas|auto registry behind one typed,
+                 batch-first kernel contract (KernelBackend)
 clause_eval.py — clause evaluation as an int8 MXU matmul (the paper's
-                 2-cycle inference datapath, recast for the systolic array)
+                 2-cycle inference datapath, recast for the systolic array);
+                 batched form evaluates all B datapoints per include-bank read
 feedback.py    — fused Type I/II TA-bank update (one VPU pass per datapoint)
 ops.py         — jit'd public wrappers (interpret=True on CPU; TPU target)
 ref.py         — pure-jnp oracles; kernels are asserted bit-exact vs these

@@ -89,3 +89,65 @@ def clause_eval(
     empty = n_inc == 0
     out = jnp.where(empty, jnp.bool_(training), fired)
     return out.reshape(C, J)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_counts_batch(
+    include: jax.Array,   # [CJ, L] int8/bool — flattened (class, clause) rows
+    literals: jax.Array,  # [B, L] bool — one row per datapoint
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(violations [CJ, B] i32, n_included [CJ] i32) via ONE MXU matmul.
+
+    The batch-first form of :func:`clause_counts`: rhs columns 0..B-1 carry
+    ``~literal_b`` (per-datapoint violation counters) and column B carries
+    ones (the include counter — datapoint-independent, so a single column
+    refines the [L, 2B] design down to [L, B+1]). The include bank streams
+    HBM->VMEM once per *batch*; the grid tiles both the flattened
+    (class x clause) axis and the datapoint-column axis.
+    """
+    cj, L = include.shape
+    B = literals.shape[0]
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Lp = -(-L // LANES) * LANES
+    cols = B + 1
+    colsp = -(-cols // LANES) * LANES
+
+    inc = jnp.zeros((cjp, Lp), dtype=jnp.int8).at[:cj, :L].set(
+        include.astype(jnp.int8)
+    )
+    rhs = jnp.zeros((Lp, colsp), dtype=jnp.int8)
+    rhs = rhs.at[:L, :B].set((1 - literals.astype(jnp.int8)).T)
+    rhs = rhs.at[:L, B].set(1)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(cjp // BLK_CJ, colsp // LANES),
+        in_specs=[
+            pl.BlockSpec((BLK_CJ, Lp), lambda i, j: (i, 0)),
+            pl.BlockSpec((Lp, LANES), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLK_CJ, LANES), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((cjp, colsp), jnp.int32),
+        interpret=interpret,
+    )(inc, rhs)
+    return out[:cj, :B], out[:cj, B]
+
+
+def clause_eval_batch(
+    include: jax.Array,   # [C, J, L] bool (post-fault TA actions)
+    literals: jax.Array,  # [B, L] bool
+    *,
+    training: bool,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed batch-first clause outputs [B, C, J] bool."""
+    C, J, L = include.shape
+    B = literals.shape[0]
+    viol, n_inc = clause_counts_batch(
+        include.reshape(C * J, L), literals, interpret=interpret
+    )
+    fired = (viol == 0).T.reshape(B, C, J)
+    empty = (n_inc == 0).reshape(C, J)
+    return jnp.where(empty[None], jnp.bool_(training), fired)

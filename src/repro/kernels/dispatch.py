@@ -1,0 +1,109 @@
+"""Backend dispatch: ONE seam between the TM core and its kernel backends.
+
+The paper's FPGA fixes its datapath at synthesis; here the datapath
+implementation is chosen at trace time through a registry keyed by
+``TMConfig.backend``:
+
+* ``"ref"``    — pure-jnp oracles (:mod:`repro.kernels.ref`). CPU default and
+  the semantic ground truth every other backend is asserted bit-exact against.
+* ``"pallas"`` — TPU Pallas kernels (:mod:`repro.kernels.ops`): MXU clause
+  matmul + fused VPU feedback plane (interpreted off-TPU).
+* ``"auto"``   — resolves to ``pallas`` when JAX is running on a TPU,
+  ``ref`` otherwise.
+
+Every backend implements the same typed contract, :class:`KernelBackend`,
+and the contract is **batch-first**: ``clause_eval_batch`` takes ``[B, L]``
+literals and returns ``[B, C, J]`` clause outputs with the include bank
+streamed once per *batch* (not once per datapoint — see DESIGN.md §8).
+Future backends (sharded, multi-device, GPU) plug in via :func:`register`
+without touching the core.
+
+This module is the ONLY place allowed to know which concrete kernel module
+backs which name; ``if cfg.backend == ...`` branches anywhere else are a bug.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+
+
+class KernelBackend(NamedTuple):
+    """The typed kernel contract every backend must implement.
+
+    All three entries are pure, trace-compatible functions:
+
+    * ``clause_eval(include [C,J,L] bool, literals [L] bool, *, training)
+      -> [C,J] bool`` — one datapoint's clause plane.
+    * ``clause_eval_batch(include [C,J,L] bool, literals [B,L] bool, *,
+      training) -> [B,C,J] bool`` — the batch-first entry point; MUST equal
+      stacking ``clause_eval`` over rows bit-for-bit.
+    * ``feedback_step(ta_state [C,J,L], literals [L], clause_out [C,J],
+      type1_sel [C,J], type2_sel [C,J], u [C,J,L], *, s, n_states, s_policy,
+      boost_true_positive) -> new ta_state`` — one datapoint's TA update.
+    """
+
+    name: str
+    clause_eval: Callable[..., jax.Array]
+    clause_eval_batch: Callable[..., jax.Array]
+    feedback_step: Callable[..., jax.Array]
+
+
+# Factories, not instances: "pallas" must not import Pallas machinery unless
+# it is actually selected (keeps ref-only environments import-light).
+_FACTORIES: dict[str, Callable[[], KernelBackend]] = {}
+_CACHE: dict[str, KernelBackend] = {}
+
+
+def register(name: str, factory: Callable[[], KernelBackend]) -> None:
+    """Register (or replace) a backend under ``name``."""
+    _FACTORIES[name] = factory
+    _CACHE.pop(name, None)
+
+
+def available() -> tuple[str, ...]:
+    """Registered backend names (plus the ``auto`` alias)."""
+    return tuple(sorted(_FACTORIES)) + ("auto",)
+
+
+def _auto_name() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def resolve(name: str) -> KernelBackend:
+    """Backend name (or ``"auto"``) -> the :class:`KernelBackend` instance."""
+    if name == "auto":
+        name = _auto_name()
+    if name not in _FACTORIES:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; available: {available()}"
+        )
+    if name not in _CACHE:
+        _CACHE[name] = _FACTORIES[name]()
+    return _CACHE[name]
+
+
+def _make_ref() -> KernelBackend:
+    from repro.kernels import ref
+
+    return KernelBackend(
+        name="ref",
+        clause_eval=ref.clause_eval,
+        clause_eval_batch=ref.clause_eval_batch,
+        feedback_step=ref.feedback_step,
+    )
+
+
+def _make_pallas() -> KernelBackend:
+    from repro.kernels import ops
+
+    return KernelBackend(
+        name="pallas",
+        clause_eval=ops.clause_eval,
+        clause_eval_batch=ops.clause_eval_batch,
+        feedback_step=ops.feedback_step,
+    )
+
+
+register("ref", _make_ref)
+register("pallas", _make_pallas)

@@ -26,6 +26,15 @@ def clause_eval(
     )
 
 
+def clause_eval_batch(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """[C, J, L] bool x [B, L] bool -> [B, C, J] bool (see ref.clause_eval_batch)."""
+    return _ce.clause_eval_batch(
+        include, literals, training=training, interpret=INTERPRET
+    )
+
+
 def feedback_step(
     ta_state: jax.Array,
     literals: jax.Array,

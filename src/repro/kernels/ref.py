@@ -30,7 +30,36 @@ def clause_eval(include: jax.Array, literals: jax.Array, *, training: bool) -> j
 def clause_eval_batch(
     include: jax.Array, literals: jax.Array, *, training: bool
 ) -> jax.Array:
-    """Batched clause eval: literals [B, L] -> [B, C, J]."""
+    """Batch-first clause eval: literals [B, L] -> [B, C, J].
+
+    One [B, L] x [L, CJ] matmul instead of a vmap of per-sample AND-reductions:
+    the include bank is the stationary GEMM operand, read once per *batch*,
+    and the reduction rides the platform's GEMM (MXU on TPU, vectorized GEMM
+    on CPU). Batch rows on the left so the [B, C, J] result needs no
+    transpose.
+
+        violations[b, cj] = sum_l (1 - literal[b, l]) * include[cj, l]
+        clause fires     <=> violations == 0
+        clause is empty  <=> n_included == 0
+
+    f32 accumulation is exact here (counts are integers <= L << 2^24), so the
+    result is bit-identical to stacking :func:`clause_eval` over rows.
+    """
+    C, J, L = include.shape
+    B = literals.shape[0]
+    inc = include.reshape(C * J, L).astype(jnp.float32)
+    neg = 1.0 - literals.astype(jnp.float32)              # [B, L] — row b = ~lit_b
+    violations = neg @ inc.T                              # [B, CJ]
+    fired = (violations == 0).reshape(B, C, J)
+    empty = ~jnp.any(include, axis=-1)                    # [C, J]
+    return jnp.where(empty[None], jnp.bool_(training), fired)
+
+
+def clause_eval_loop(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """Per-sample-loop batched eval: the oracle the batch paths are tested
+    against (literally a vmap of :func:`clause_eval` over rows)."""
     return jax.vmap(lambda l: clause_eval(include, l, training=training))(literals)
 
 

@@ -1,11 +1,17 @@
-"""The paper's Fig-3 online-learning FSM generalized to LM serving.
+"""The paper's Fig-3 online-learning FSM at the serving layer.
 
-offline train -> accuracy analysis -> [serve + interleaved online updates ->
-periodic re-analysis] — with the paper's §5.3.2 mitigation policy: if
-analysis accuracy (here: eval loss) degrades past a threshold, roll back to
-the last good checkpoint and optionally re-train. This is the TM
-architecture's learning-management subsystem applied to any arch in
-`repro.configs` (DESIGN.md §4: what transfers to every architecture).
+Two managers share the same control shape (offline train -> accuracy
+analysis -> [serve + interleaved online updates -> periodic re-analysis]
+with the §5.3.2 mitigation policy: on degradation past a threshold, roll
+back to the last known-good state):
+
+* :class:`TMOnlineAdaptManager` — the paper's own machine. Serving inference
+  and analysis both route through the **batch-first dispatched kernel path**
+  (``tm.predict_batch`` / ``accuracy.analyze``; DESIGN.md §8) and online
+  updates drain through the chunked ``online._consume_many`` scan — the
+  served numbers are produced by exactly the code the benchmarks measure.
+* :class:`OnlineAdaptManager` — the same FSM generalized to LM serving for
+  any arch in `repro.configs` (DESIGN.md §4: what transfers).
 """
 from __future__ import annotations
 
@@ -17,9 +23,99 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import accuracy as acc_mod
+from repro.core import online as online_mod
+from repro.core.tm import TMConfig, TMRuntime, TMState
 from repro.models import transformer
 from repro.train import checkpoint as ckpt_mod
 from repro.train import train_step as ts_mod
+
+
+@dataclasses.dataclass
+class TMOnlineAdaptConfig:
+    analyze_every: int = 32           # online datapoints between analyses
+    rollback_threshold: float = 0.1   # absolute accuracy drop triggering rollback
+    buffer_capacity: int = 64
+    chunk: int = 16                   # datapoints drained per jitted call
+
+
+class TMOnlineAdaptManager:
+    """Fig-3 FSM serving the TM itself, on the batch-first kernel path.
+
+    * ``serve(xs)``  — batched inference (``tm.predict_batch``).
+    * ``observe(x, y)`` — labelled traffic into the cyclic buffer; every
+      ``analyze_every`` consumed points the eval set is re-analyzed (one
+      batch-first pass) and the §5.3.2 policy rolls the TA bank back to the
+      last known-good snapshot if accuracy collapsed.
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState, rt: TMRuntime,
+                 eval_x, eval_y, oc: Optional[TMOnlineAdaptConfig] = None,
+                 seed: int = 0):
+        self.cfg, self.rt = cfg, rt
+        self.oc = oc or TMOnlineAdaptConfig()
+        self.eval_x = jnp.asarray(eval_x, dtype=bool)
+        self.eval_y = jnp.asarray(eval_y, dtype=jnp.int32)
+        self.session = online_mod.OnlineSession(
+            cfg, state, rt,
+            buffer_capacity=self.oc.buffer_capacity,
+            chunk=self.oc.chunk, seed=seed,
+        )
+        self.history: list = []       # (consumed_steps, eval_accuracy)
+        self.rollbacks = 0
+        self.lost = 0                 # datapoints dropped even after retry
+        self._since_analysis = 0
+        self._best: Optional[float] = None
+        self._best_state: TMState = self.session.ss.tm
+
+    def serve(self, xs) -> np.ndarray:
+        """Batched predictions for live traffic (the shipped number)."""
+        return self.session.infer(xs)
+
+    def analyze(self) -> float:
+        acc = float(acc_mod.analyze(
+            self.cfg, self.session.ss.tm, self.rt, self.eval_x, self.eval_y
+        ))
+        self.history.append((int(self.session.ss.step), acc))
+        return acc
+
+    def offline_train(self, xs, ys, n_epochs: int = 10, seed: int = 1) -> float:
+        from repro.core import feedback as fb_mod
+
+        st = fb_mod.train_epochs(
+            self.cfg, self.session.ss.tm, self.rt,
+            jnp.asarray(xs, dtype=bool), jnp.asarray(ys, dtype=jnp.int32),
+            jax.random.PRNGKey(seed), n_epochs,
+        )
+        self.session.ss = self.session.ss._replace(tm=st)
+        acc = self.analyze()
+        self._best, self._best_state = acc, st
+        return acc
+
+    def observe(self, x, y) -> Optional[float]:
+        """One labelled online datapoint; returns eval accuracy on analysis
+        steps, None otherwise."""
+        chunk = self.session.chunk  # session clamps to [1, buffer_capacity]
+        if not self.session.offer(x, y):
+            # Backpressure: drain a chunk, then retry once. Drained points
+            # still count toward the analysis cadence. Note session.dropped
+            # counts rejection *events* (including a first attempt whose
+            # retry succeeds); ``self.lost`` counts actual losses.
+            self._since_analysis += self.session.learn_available(chunk)
+            if not self.session.offer(x, y):
+                self.lost += 1
+        self._since_analysis += self.session.learn_available(chunk)
+        if self._since_analysis < self.oc.analyze_every:
+            return None
+        self._since_analysis = 0
+        acc = self.analyze()
+        if self._best is not None and acc < self._best - self.oc.rollback_threshold:
+            # §5.3.2: accuracy collapsed — restore the known-good TA bank.
+            self.session.ss = self.session.ss._replace(tm=self._best_state)
+            self.rollbacks += 1
+        elif self._best is None or acc > self._best:
+            self._best, self._best_state = acc, self.session.ss.tm
+        return acc
 
 
 @dataclasses.dataclass

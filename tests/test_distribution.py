@@ -33,14 +33,14 @@ def test_spec_partition_rules():
 
 def test_fsdp_shards_largest_free_dim():
     # AbstractMesh: rule evaluation needs only mesh.shape, not real devices
-    mesh = jax.sharding.AbstractMesh((2, 16), ("data", "model"))
+    mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 16)))
     pol = shd.ShardingPolicy()
     ps = shd.spec_partition(PSpec((128, 64), ("embed", "ff")), mesh, pol)
     assert ps == PS("data", "model")  # ff -> TP; fsdp picks embed over data
 
 
 def test_spec_partition_nondivisible_replicates():
-    mesh = jax.sharding.AbstractMesh((16,), ("model",))
+    mesh = jax.sharding.AbstractMesh((("model", 16),))
     pol = shd.ShardingPolicy(fsdp=False)
     ps = shd.spec_partition(PSpec((7, 3), ("kv_heads", "head_dim")), mesh, pol)
     assert ps == PS(None, None)

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import TMConfig, init_runtime, init_state, train_step
 from repro.core import tm as tm_mod

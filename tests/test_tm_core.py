@@ -114,7 +114,11 @@ def test_runtime_s_T_change_no_recompile():
 
 def test_training_learns_iris():
     cfg = small_cfg()
-    rt = init_runtime(cfg, s=3.0, T=15)
+    # T must be attainable by the vote range: with J=16 clauses the class sum
+    # lives in [-8, 8], so T=15 can never be reached and the feedback
+    # probability (T - v)/2T never anneals — the machine churns at ~0.87.
+    # T=5 (also what hpsearch_grid selects on this setup) converges.
+    rt = init_runtime(cfg, s=3.0, T=5)
     xs, ys = iris.load()
     st = train_epochs(cfg, init_state(cfg), rt, jnp.asarray(xs), jnp.asarray(ys),
                       jax.random.PRNGKey(0), 10)
