@@ -6,8 +6,6 @@ runs all cross-validation orderings as ONE vmapped program.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -44,7 +42,13 @@ def build_sets(n_orderings: int, offline_limit: int | None = 20):
 
 def run_schedule(schedule, *, n_orderings=24, n_cycles=16,
                  offline_limit: int | None = 20, seed=0):
-    """Mean accuracy curves [1+n_cycles, 3] over orderings + wall time."""
+    """Mean accuracy curves [1+n_cycles, 3] over orderings + wall time.
+
+    Thin caller of the replica-parallel engine: every ordering's Fig-3 run
+    advances in one fused plane per datapoint (repro.eval.crossval).
+    """
+    from repro.eval.crossval import CrossValRun
+
     sets, O = build_sets(n_orderings, offline_limit)
     sys_cfg = mgr.SystemConfig(
         n_offline_epochs=TM_SYS.n_offline_epochs, n_online_cycles=n_cycles
@@ -53,14 +57,10 @@ def run_schedule(schedule, *, n_orderings=24, n_cycles=16,
     states = jax.vmap(lambda _: init_state(CFG))(jnp.arange(O))
     keys = jax.random.split(jax.random.PRNGKey(seed), O)
 
-    t0 = time.time()
-    _, accs, activity = mgr.run_orderings(
-        CFG, sys_cfg, states, rt, sets, schedule, keys
-    )
-    accs = np.asarray(accs)          # [O, 1+n_cycles, 3]
-    activity = np.asarray(activity)  # [O, n_cycles]
-    wall = time.time() - t0
-    return accs.mean(axis=0), activity.mean(axis=0), wall, O
+    res = CrossValRun(CFG).system(sys_cfg, states, rt, sets, schedule, keys)
+    accs = np.asarray(res.accuracies)    # [O, 1+n_cycles, 3]
+    activity = np.asarray(res.activity)  # [O, n_cycles]
+    return accs.mean(axis=0), activity.mean(axis=0), res.wall_s, O
 
 
 def curve_csv(name: str, curve: np.ndarray) -> str:

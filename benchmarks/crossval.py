@@ -1,0 +1,179 @@
+"""Replica-parallel cross-validation engine benchmark (paper goal ii, §5).
+
+Measures the fused sweep program (repro.eval.crossval.CrossValRun) against
+the pre-engine vmap-of-scan paths it replaced, asserting bit-identical
+results every run:
+
+* ``crossval_sweep``  — the (s x T x orderings) hyperparameter sweep:
+  engine vs the legacy ``hpsearch.grid_search_device`` nested-vmap program.
+* ``crossval_system`` — the Fig-3 system flow over all orderings:
+  engine vs ``vmap(manager.run_system)`` (the old ``run_orderings`` body).
+
+Every row is written machine-readable to ``BENCH_crossval.json`` (override
+with env ``REPRO_BENCH_CROSSVAL_JSON``) so the sweep speedup is tracked
+across PRs next to BENCH_throughput.json. The headline field is
+``results[crossval_sweep].speedup`` — the replica-parallel engine must stay
+>= 2x over the vmap-of-scan baseline on CPU.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import hpsearch
+from repro.core import manager as mgr
+from repro.core import init_runtime, init_state
+from repro.data import blocks
+from repro.eval.crossval import CrossValRun
+
+CFG = common.CFG
+
+RESULTS: list[dict] = []
+
+S_GRID = (1.375, 2.0, 3.0)
+T_GRID = (5, 10, 15)
+N_EPOCHS = 10
+
+
+def _min_time(fn, *, trials=3, inner=1):
+    """Min seconds/call over interleave-friendly trials (first call warms)."""
+    out = jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best, out
+
+
+def _emit(name: str, us_per_call: float, derived: str, **extra):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": us_per_call, **extra})
+
+
+def sweep_bench(n_orderings: int, seed: int = 0) -> dict:
+    """Engine vs legacy nested-vmap sweep; bitwise equality asserted."""
+    osets, _ = blocks.iris_paper_sets(n_orderings=n_orderings)
+    off = (jnp.asarray(osets.offline_x), jnp.asarray(osets.offline_y))
+    val = (jnp.asarray(osets.validation_x), jnp.asarray(osets.validation_y))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_orderings)
+    s_grid = jnp.asarray(S_GRID, jnp.float32)
+    T_grid = jnp.asarray(T_GRID, jnp.int32)
+
+    legacy = lambda: hpsearch.grid_search_device(
+        CFG, s_grid, T_grid, off, val, keys, N_EPOCHS
+    )
+    run = CrossValRun(CFG)
+    engine = lambda: run.sweep(
+        *off, *val, S_GRID, T_GRID, n_epochs=N_EPOCHS, seed=seed
+    ).val_accuracy
+
+    # Interleave so background host load skews both paths equally.
+    t_eng, t_leg = float("inf"), float("inf")
+    acc_eng = acc_leg = None
+    for _ in range(3):
+        t, acc_eng = _min_time(engine, trials=1)
+        t_eng = min(t_eng, t)
+        t, acc_leg = _min_time(legacy, trials=1)
+        t_leg = min(t_leg, t)
+    if not np.array_equal(np.asarray(acc_eng), np.asarray(acc_leg)):
+        raise AssertionError(
+            "replica-parallel sweep diverges from the vmap-of-scan baseline"
+        )
+
+    R = len(S_GRID) * len(T_GRID) * n_orderings
+    return {
+        "cells": R,
+        "replicas": R,
+        "wall_s_engine": t_eng,
+        "wall_s_legacy_vmap": t_leg,
+        "speedup": t_leg / t_eng,
+        "replicas_per_s": R / t_eng,
+        "bitwise_identical": True,
+    }
+
+
+def system_bench(n_orderings: int, n_cycles: int = 16, seed: int = 0) -> dict:
+    """Engine vs vmap(run_system) over orderings; bitwise equality asserted."""
+    sets, O = common.build_sets(n_orderings)
+    sys_cfg = mgr.SystemConfig(n_offline_epochs=N_EPOCHS, n_online_cycles=n_cycles)
+    schedule = mgr.make_schedule(online_s=1.0)
+    rt = init_runtime(CFG, s=1.375, T=15)
+    states = jax.vmap(lambda _: init_state(CFG))(jnp.arange(O))
+    keys = jax.random.split(jax.random.PRNGKey(seed), O)
+
+    legacy_fn = jax.vmap(
+        lambda st, ss, k: mgr.run_system(CFG, sys_cfg, st, rt, ss, schedule, k)
+    )
+    legacy = lambda: legacy_fn(states, sets, keys)[1]
+    run = CrossValRun(CFG)
+    engine = lambda: run.system(sys_cfg, states, rt, sets, schedule, keys).accuracies
+
+    t_eng, t_leg = float("inf"), float("inf")
+    acc_eng = acc_leg = None
+    for _ in range(3):
+        t, acc_eng = _min_time(engine, trials=1)
+        t_eng = min(t_eng, t)
+        t, acc_leg = _min_time(legacy, trials=1)
+        t_leg = min(t_leg, t)
+    if not np.array_equal(np.asarray(acc_eng), np.asarray(acc_leg)):
+        raise AssertionError(
+            "replica-parallel system run diverges from vmap(run_system)"
+        )
+
+    return {
+        "orderings": O,
+        "n_cycles": n_cycles,
+        "wall_s_engine": t_eng,
+        "wall_s_legacy_vmap": t_leg,
+        "speedup": t_leg / t_eng,
+        "replicas_per_s": O / t_eng,
+        "bitwise_identical": True,
+    }
+
+
+def main(n_orderings: int = 24):
+    RESULTS.clear()
+
+    row = sweep_bench(n_orderings)
+    _emit(
+        "crossval_sweep", row["wall_s_engine"] * 1e6,
+        f"cells={row['cells']};replicas_per_s={row['replicas_per_s']:.1f};"
+        f"legacy_s={row['wall_s_legacy_vmap']:.3f};"
+        f"speedup={row['speedup']:.2f}x;bitwise_identical=1",
+        **row,
+    )
+
+    row = system_bench(n_orderings)
+    _emit(
+        "crossval_system", row["wall_s_engine"] * 1e6,
+        f"orderings={row['orderings']};"
+        f"replicas_per_s={row['replicas_per_s']:.1f};"
+        f"legacy_s={row['wall_s_legacy_vmap']:.3f};"
+        f"speedup={row['speedup']:.2f}x;bitwise_identical=1",
+        **row,
+    )
+
+    out_path = os.environ.get("REPRO_BENCH_CROSSVAL_JSON", "BENCH_crossval.json")
+    payload = {
+        "benchmark": "crossval",
+        "backend": CFG.backend,
+        "jax_backend": jax.default_backend(),
+        "grid": {"s": list(S_GRID), "T": list(T_GRID), "n_epochs": N_EPOCHS},
+        "results": RESULTS,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main(int(os.environ.get("REPRO_BENCH_ORDERINGS", "24")))

@@ -18,6 +18,7 @@ def main() -> None:
     ok = True
 
     t0 = time.time()
+    from benchmarks import crossval as crossval_bench
     from benchmarks import fig4_limited_data, fig567_class_intro, fig89_faults
     from benchmarks import throughput
 
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig567", lambda: fig567_class_intro.main(n_ord)),
         ("fig89", lambda: fig89_faults.main(n_ord)),
         ("throughput", throughput.main),
+        ("crossval", lambda: crossval_bench.main(n_ord)),
     ]:
         try:
             fn()

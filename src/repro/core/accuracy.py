@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import tm as tm_mod
 from repro.core.tm import TMConfig, TMRuntime, TMState
+from repro.kernels import dispatch
 
 
 def analyze(
@@ -38,6 +39,41 @@ def analyze(
         return jnp.mean(ok)
     v = valid.astype(jnp.float32)
     return jnp.sum(ok * v) / jnp.maximum(jnp.sum(v), 1.0)
+
+
+def analyze_replicated(
+    cfg: TMConfig,
+    state: TMState,     # leaves [R, ...]
+    rt: TMRuntime,      # masks shared; s/T scalar or [R]
+    xs: jax.Array,      # [D, m, f] bool — replica r analyzes set r % D
+    ys: jax.Array,      # [D, m] int32
+    valid: jax.Array | None = None,  # [D, m] bool
+) -> jax.Array:
+    """Per-replica accuracy over R independent machines. [R] f32.
+
+    The replica-parallel form of :func:`analyze`: the whole cross-validation
+    sweep's analysis pass is ONE dispatched ``clause_eval_batch_replicated``
+    contraction. Replica ``r`` reproduces ``analyze`` on set ``r % D``
+    bit-for-bit (violation counts are integer-exact in f32; the per-replica
+    mean reduces over the same m values in the same order).
+    """
+    R = state.ta_state.shape[0]
+    D = xs.shape[0]
+    H = R // D
+    lits = tm_mod.make_literals(xs)                    # [D, m, 2f]
+    include = tm_mod.ta_actions(cfg, state, rt)        # [R, C, J, L]
+    clauses = dispatch.resolve(cfg.backend).clause_eval_batch_replicated(
+        include, lits, training=False
+    )                                                  # [R, m, C, J]
+    clauses = clauses & rt.clause_mask
+    votes = tm_mod.class_sums(cfg, clauses)            # [R, m, C]
+    votes = jnp.where(rt.class_mask, votes, jnp.iinfo(jnp.int32).min)
+    preds = jnp.argmax(votes, axis=-1)                 # [R, m]
+    ok = (preds == jnp.tile(ys, (H, 1))).astype(jnp.float32)
+    if valid is None:
+        return jnp.mean(ok, axis=-1)
+    v = jnp.tile(valid, (H, 1)).astype(jnp.float32)
+    return jnp.sum(ok * v, axis=-1) / jnp.maximum(jnp.sum(v, axis=-1), 1.0)
 
 
 class History(NamedTuple):

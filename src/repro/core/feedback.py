@@ -32,35 +32,32 @@ class StepAux(NamedTuple):
                            # (the clock-gating/energy analogue, DESIGN.md §2)
 
 
-def _feedback_selection(
+def _selection_core(
     cfg: TMConfig,
-    rt: TMRuntime,
-    votes: jax.Array,  # [C] int32
-    y: jax.Array,      # scalar int32 target class
+    T: jax.Array,            # scalar i32
+    clause_mask: jax.Array,  # [J] bool
+    class_mask: jax.Array,   # [C] bool
+    votes: jax.Array,        # [C] int32
+    y: jax.Array,            # scalar int32 target class
     key: jax.Array,
 ):
-    """Choose per-clause feedback types for the target + one sampled non-target.
-
-    Target class y:   P(feedback) = (T - clip(v_y)) / 2T
-                      positive-polarity clauses -> Type I, negative -> Type II.
-    Sampled class ny: P(feedback) = (T + clip(v_ny)) / 2T
-                      positive -> Type II, negative -> Type I.
-    """
+    """One replica's feedback-type selection (shared by the single-machine and
+    replica-parallel paths so both consume identical RNG streams)."""
     k_neg, k_t, k_n = jax.random.split(key, 3)
-    T = rt.T.astype(jnp.float32)
+    Tf = T.astype(jnp.float32)
     C, J = cfg.max_classes, cfg.max_clauses
 
     # Sample a non-target active class uniformly (the paper's multi-class rule).
-    neg_ok = rt.class_mask & (jnp.arange(C) != y)
+    neg_ok = class_mask & (jnp.arange(C) != y)
     logits = jnp.where(neg_ok, 0.0, -jnp.inf)
     ny = jax.random.categorical(k_neg, logits)
 
-    v = jnp.clip(votes, -rt.T, rt.T).astype(jnp.float32)
-    p_t = (T - v[y]) / (2.0 * T)
-    p_n = (T + v[ny]) / (2.0 * T)
+    v = jnp.clip(votes, -T, T).astype(jnp.float32)
+    p_t = (Tf - v[y]) / (2.0 * Tf)
+    p_n = (Tf + v[ny]) / (2.0 * Tf)
 
-    sel_t = (jax.random.uniform(k_t, (J,)) < p_t) & rt.clause_mask
-    sel_n = (jax.random.uniform(k_n, (J,)) < p_n) & rt.clause_mask
+    sel_t = (jax.random.uniform(k_t, (J,)) < p_t) & clause_mask
+    sel_n = (jax.random.uniform(k_n, (J,)) < p_n) & clause_mask
 
     pos = tm_mod.clause_polarity(cfg) > 0  # [J]
     onehot_y = jax.nn.one_hot(y, C, dtype=bool)
@@ -75,9 +72,28 @@ def _feedback_selection(
         | onehot_n[:, None] & (sel_n & pos)[None, :]
     )
     # Inactive classes never receive feedback (over-provisioning, §3.1.1).
-    type1 = type1 & rt.class_mask[:, None]
-    type2 = type2 & rt.class_mask[:, None]
+    type1 = type1 & class_mask[:, None]
+    type2 = type2 & class_mask[:, None]
     return type1, type2
+
+
+def _feedback_selection(
+    cfg: TMConfig,
+    rt: TMRuntime,
+    votes: jax.Array,  # [C] int32
+    y: jax.Array,      # scalar int32 target class
+    key: jax.Array,
+):
+    """Choose per-clause feedback types for the target + one sampled non-target.
+
+    Target class y:   P(feedback) = (T - clip(v_y)) / 2T
+                      positive-polarity clauses -> Type I, negative -> Type II.
+    Sampled class ny: P(feedback) = (T + clip(v_ny)) / 2T
+                      positive -> Type II, negative -> Type I.
+    """
+    return _selection_core(
+        cfg, rt.T, rt.clause_mask, rt.class_mask, votes, y, key
+    )
 
 
 def train_update(
@@ -179,6 +195,154 @@ def train_datapoints(
     keys = jax.random.split(key, n)
     final, auxes = jax.lax.scan(body, state, (xs, ys, valid, keys))
     return final, auxes
+
+
+# ---------------------------------------------------------------------------
+# Replica-parallel training (cross-validation x hyperparameter sweep axis).
+#
+# R independent TMs advance one datapoint per step in ONE fused plane. Layout
+# rule (mirrors the kernel contract in kernels/dispatch.py): per-replica state
+# and control carry a leading R; per-data-stream operands (xs, ys, keys) carry
+# a leading D with D | R, replica r consuming stream r % D. A hyperparameter
+# sweep lays replicas out grid-major/ordering-minor so the (s, T) grid shares
+# each ordering's data and RNG draws instead of tiling them R/D-fold; RNG
+# streams are per data replica, so results are bit-identical to running each
+# replica through train_update alone.
+# ---------------------------------------------------------------------------
+
+
+def _replica_counts(state: TMState, xs: jax.Array) -> tuple[int, int]:
+    R = state.ta_state.shape[0]
+    D = xs.shape[0]
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    return R, D
+
+
+def train_update_replicated(
+    cfg: TMConfig,
+    state: TMState,    # leaves [R, ...]
+    rt: TMRuntime,     # s/T scalar or [R]; masks shared (unreplicated) shapes
+    x: jax.Array,      # [D, f] bool
+    y: jax.Array,      # [D] int32
+    key: jax.Array,    # [D] keys
+) -> tuple[TMState, jax.Array, jax.Array]:
+    """One datapoint's TA-bank update for all R replicas at once.
+
+    Replica ``r`` performs exactly the computation of :func:`train_update`
+    with data stream ``r % D`` and hyperparameters ``s[r]``/``T[r]`` —
+    bit-for-bit, including the RNG draws (streams are keyed per data
+    replica, shared across a hyperparameter grid exactly as re-running
+    :func:`train_update` per cell would). Returns (new_state,
+    votes [R, C], activity [R]); unused outputs are DCE'd under jit.
+    """
+    R, D = _replica_counts(state, x)
+    H = R // D
+    k2 = jax.vmap(jax.random.split)(key)        # [D, 2, key]
+    k_sel, k_u = k2[:, 0], k2[:, 1]
+
+    lits = tm_mod.make_literals(x)              # [D, L]
+    include = tm_mod.ta_actions(cfg, state, rt)  # [R, C, J, L] (masks broadcast)
+
+    backend = dispatch.resolve(cfg.backend)
+    clauses_tr = backend.clause_eval_replicated(include, lits, training=True)
+    clauses_tr = clauses_tr & rt.clause_mask[None, None, :]
+    votes = tm_mod.class_sums(cfg, clauses_tr)  # [R, C]
+
+    T_rep = jnp.broadcast_to(jnp.asarray(rt.T, jnp.int32), (R,))
+    sel = partial(_selection_core, cfg)
+    type1, type2 = jax.vmap(sel, in_axes=(0, None, None, 0, 0, 0))(
+        T_rep, rt.clause_mask, rt.class_mask,
+        votes, jnp.tile(y, H), jnp.tile(k_sel, (H, 1)),
+    )
+
+    u = jax.vmap(
+        lambda k: jax.random.uniform(
+            k, (cfg.max_classes, cfg.max_clauses, cfg.n_literals),
+            dtype=jnp.float32,
+        )
+    )(k_u)                                      # [D, C, J, L] — factored draws
+
+    new_ta = backend.feedback_step_replicated(
+        state.ta_state, lits, clauses_tr, type1, type2, u,
+        s=jnp.broadcast_to(jnp.asarray(rt.s, jnp.float32), (R,)),
+        n_states=cfg.n_states, s_policy=cfg.s_policy,
+        boost_true_positive=cfg.boost_true_positive,
+    )
+
+    activity = jnp.mean(
+        (new_ta != state.ta_state).astype(jnp.float32), axis=(1, 2, 3)
+    )
+    return TMState(ta_state=new_ta), votes, activity
+
+
+def train_datapoints_replicated(
+    cfg: TMConfig,
+    state: TMState,    # leaves [R, ...]
+    rt: TMRuntime,
+    xs: jax.Array,     # [D, n, f] bool
+    ys: jax.Array,     # [D, n] int32
+    key: jax.Array,    # [D] keys
+    valid: jax.Array | None = None,  # [D, n] bool
+) -> tuple[TMState, jax.Array]:
+    """Stream the data sets serially while updating all R replicas per step.
+
+    The replica-parallel form of :func:`train_datapoints`: ONE ``lax.scan``
+    over datapoint index (the FPGA's row order, preserving feedback-sees-
+    state-from-t-1 semantics) whose body advances every replica in a single
+    fused plane. Returns (final_state, activity [n, R]).
+    """
+    R, D = _replica_counts(state, xs)
+    H = R // D
+    n = xs.shape[1]
+    if valid is None:
+        valid = jnp.ones((D, n), dtype=bool)
+
+    keys = jax.vmap(lambda k: jax.random.split(k, n))(key)  # [D, n, key]
+    keys = jnp.swapaxes(keys, 0, 1)                         # [n, D, key]
+
+    def body(carry, inp):
+        st = carry
+        x, y, v, k = inp               # [D, f], [D], [D], [D] keys
+        new_st, _, act = train_update_replicated(cfg, st, rt, x, y, k)
+        vR = jnp.tile(v, H)            # replica r gated by stream r % D
+        st = jax.tree.map(
+            lambda a, b: jnp.where(
+                vR.reshape((R,) + (1,) * (a.ndim - 1)), a, b
+            ),
+            new_st, st,
+        )
+        return st, jnp.where(vR, act, 0.0)
+
+    final, activity = jax.lax.scan(
+        body, state,
+        (jnp.swapaxes(xs, 0, 1), jnp.swapaxes(ys, 0, 1),
+         jnp.swapaxes(valid, 0, 1), keys),
+    )
+    return final, activity
+
+
+@partial(jax.jit, static_argnums=0)
+def train_epochs_replicated(
+    cfg: TMConfig,
+    state: TMState,    # leaves [R, ...]
+    rt: TMRuntime,
+    xs: jax.Array,     # [D, n, f]
+    ys: jax.Array,     # [D, n]
+    key: jax.Array,    # [D] keys
+    n_epochs: int | jax.Array,
+    valid: jax.Array | None = None,
+) -> TMState:
+    """Replica-parallel :func:`train_epochs`: the whole sweep's offline
+    training is one compiled program scanning the dataset once per epoch."""
+    n_epochs = jnp.asarray(n_epochs, dtype=jnp.int32)
+
+    def body(i, st):
+        k = jax.vmap(lambda kk: jax.random.fold_in(kk, i))(key)
+        new_st, _ = train_datapoints_replicated(cfg, st, rt, xs, ys, k, valid)
+        return new_st
+
+    return jax.lax.fori_loop(0, n_epochs, body, state)
 
 
 @partial(jax.jit, static_argnums=0)

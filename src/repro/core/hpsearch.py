@@ -3,9 +3,16 @@
 The paper: "the fast execution time allows entire datasets to be analyzed in a
 matter of seconds, allowing the optimum hyper-parameters ... to be discovered
 within a short period of time." On TPU the acceleration axis is *replication*:
-every (ordering x s x T) replica is an independent TM, so the whole grid is
-one `vmap`-ed program, and the replica axis shards over the device mesh
-(`data` axis) with pjit for pod-scale search.
+every (ordering x s x T) replica is an independent TM. :func:`grid_search` is
+now a thin caller of the replica-parallel engine
+(:class:`repro.eval.crossval.CrossValRun`), which fuses the whole sweep into
+ONE compiled program over a leading replica axis (shardable over the device
+mesh for pod-scale search).
+
+:func:`_one_cell` is the per-cell reference semantics, and
+:func:`grid_search_device` keeps the pre-engine vmap-of-scan path alive as
+the baseline the engine is benchmarked (and bit-compared) against — see
+benchmarks/crossval.py / BENCH_crossval.json.
 """
 from __future__ import annotations
 
@@ -13,13 +20,12 @@ from functools import partial
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import accuracy as acc_mod
 from repro.core import feedback as fb_mod
 from repro.core import tm as tm_mod
-from repro.core.tm import TMConfig, TMRuntime, TMState
+from repro.core.tm import TMConfig
 
 
 class GridResult(NamedTuple):
@@ -54,7 +60,12 @@ def grid_search_device(
     keys: jax.Array,     # [O] keys
     n_epochs: int,
 ) -> jax.Array:
-    """Validation accuracy for every (s, T, ordering). [S, G, O] f32."""
+    """Validation accuracy for every (s, T, ordering). [S, G, O] f32.
+
+    LEGACY vmap-of-scan path (pre replica-parallel engine), kept as the
+    benchmark baseline and as an independent oracle for the engine's
+    bit-exactness tests. New callers should use ``grid_search`` (engine).
+    """
     off_x, off_y = off_sets
     val_x, val_y = val_sets
 
@@ -76,23 +87,25 @@ def grid_search(
     *,
     n_epochs: int = 10,
     seed: int = 0,
+    mesh=None,
 ) -> GridResult:
-    """Host wrapper: the full (s x T x orderings) sweep as one program."""
-    s_grid = jnp.asarray(s_values, dtype=jnp.float32)
-    T_grid = jnp.asarray(T_values, dtype=jnp.int32)
-    n_orderings = off_x.shape[0]
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_orderings)
-    acc = grid_search_device(
-        cfg, s_grid, T_grid,
-        (jnp.asarray(off_x, bool), jnp.asarray(off_y, jnp.int32)),
-        (jnp.asarray(val_x, bool), jnp.asarray(val_y, jnp.int32)),
-        keys, n_epochs,
+    """The full (s x T x orderings) sweep as one replica-parallel program.
+
+    Thin caller of :class:`repro.eval.crossval.CrossValRun`; results are
+    bit-identical to the legacy :func:`grid_search_device` path (and to
+    looping :func:`_one_cell`).
+    """
+    from repro.eval.crossval import CrossValRun
+
+    res = CrossValRun(cfg, mesh=mesh).sweep(
+        off_x, off_y, val_x, val_y, s_values, T_values,
+        n_epochs=n_epochs, seed=seed,
     )
     return GridResult(
-        s_grid=np.asarray(s_grid),
-        T_grid=np.asarray(T_grid),
-        val_accuracy=acc,
-        mean_accuracy=jnp.mean(acc, axis=-1),
+        s_grid=res.s_grid,
+        T_grid=res.T_grid,
+        val_accuracy=res.val_accuracy,
+        mean_accuracy=res.mean_accuracy,
     )
 
 

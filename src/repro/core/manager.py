@@ -28,6 +28,11 @@ class Sets(NamedTuple):
     ``offline_train_valid`` restricts TRAINING rows (§5.1 uses 20 of 30);
     ``offline_valid`` governs accuracy ANALYSIS of the offline set (the paper
     analyzes the full set, so the 10 untrained rows count toward accuracy).
+
+    Shapes below are the single-machine form (:func:`run_system`). Under the
+    replica-parallel engine (:func:`run_orderings` /
+    ``repro.eval.crossval``), every leaf carries a LEADING ordering axis
+    ``[O, ...]`` — see the Schedule contract note below.
     """
 
     offline_x: jax.Array     # [n_off, f] bool
@@ -52,6 +57,15 @@ class CycleCtl(NamedTuple):
 
 # A schedule maps (cycle_index, base_runtime, base_sets) -> CycleCtl.
 # cycle_index == -1 denotes the offline-training phase.
+#
+# CONTRACT: a schedule must be broadcast-safe over a leading replica axis.
+# Under run_system it sees the documented per-ordering Sets shapes; under
+# the replica-parallel engine (run_orderings / repro.eval.crossval) the
+# SAME schedule is applied once to Sets whose leaves carry a leading [O]
+# ordering axis (and a shared runtime). Write mask logic against the LAST
+# axes (e.g. ``ys != c``, ``arange(n) < k`` broadcast against ``[..., n]``)
+# and never key off ``shape[0]`` — everything make_schedule produces obeys
+# this.
 Schedule = Callable[[jax.Array, TMRuntime, Sets], CycleCtl]
 
 
@@ -199,12 +213,21 @@ def run_orderings(
     rt: TMRuntime,
     sets: Sets,            # leading axis = ordering on every leaf
     schedule: Schedule,
-    keys: jax.Array,       # [O, 2] keys
+    keys: jax.Array,       # [O] keys
+    mesh=None,
 ):
-    """All cross-validation orderings in parallel (vmap over the leading axis).
+    """All cross-validation orderings in parallel — ONE replicated program.
 
-    This is the paper's 120-orderings re-run executed as ONE batched program —
-    the TPU-native form of its block-ROM cross-validation subsystem.
+    This is the paper's 120-orderings re-run executed through the
+    replica-parallel engine (repro.eval.crossval): each datapoint step
+    advances every ordering's TA bank in one fused plane, the TPU-native
+    form of the paper's block-ROM cross-validation subsystem. Thin caller of
+    :meth:`CrossValRun.system`; bit-identical to vmapping
+    :func:`run_system` over orderings (tests/test_manager.py).
     """
-    fn = lambda st, ss, k: run_system(cfg, sys_cfg, st, rt, ss, schedule, k)
-    return jax.vmap(fn)(states, sets, keys)
+    from repro.eval.crossval import CrossValRun
+
+    res = CrossValRun(cfg, mesh=mesh).system(
+        sys_cfg, states, rt, sets, schedule, keys
+    )
+    return res.state, res.accuracies, res.activity

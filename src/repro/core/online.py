@@ -9,7 +9,7 @@ jitted device steps; all device-side state is fixed-shape.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -145,24 +145,37 @@ class OnlineSession:
             accepted += self.offer(x, int(y))
         return accepted
 
-    def learn_available(self, max_points: int) -> int:
+    def learn_available(
+        self,
+        max_points: int,
+        on_chunk: Optional[Callable[[ChunkAux], None]] = None,
+    ) -> int:
         """Consume up to ``max_points`` buffered datapoints; returns #trained.
 
         Drains in chunks of ``self.chunk`` per jitted call (one device
         dispatch per chunk instead of one per datapoint); the final partial
         chunk is handled by the traced ``limit`` port, so chunk size never
         retraces.
+
+        ``on_chunk`` (optional) receives each chunk's :class:`ChunkAux` —
+        the serving-side accuracy/activity observability of the paper's
+        Fig. 3 analysis block. Without a callback the monitoring pass is
+        compiled out entirely (``monitor=False``), so observability costs
+        nothing unless requested.
         """
         trained = 0
+        monitor = on_chunk is not None
         while trained < max_points:
             want = min(self.chunk, max_points - trained)
             self._key, k = jax.random.split(self._key)
-            self.ss, n, _ = _consume_many(
+            self.ss, n, aux = _consume_many(
                 self.cfg, self.chunk, self.ss, self.rt, jnp.int32(want), k,
-                monitor=False,
+                monitor=monitor,
             )
             n = int(n)
             trained += n
+            if monitor and n:
+                on_chunk(aux)
             if n < want:  # buffer drained before the budget ran out
                 break
         return trained

@@ -137,6 +137,33 @@ def batch_shardings(batch_struct, mesh: Mesh, policy: ShardingPolicy):
     )
 
 
+def replica_shardings(tree, mesh: Mesh, *, axes: tuple[str, ...] = ("data",)):
+    """Shard each leaf's LEADING replica axis over the given mesh axes.
+
+    The cross-validation / hyperparameter-sweep engine (repro.eval.crossval)
+    runs R independent TMs as one program; every replica is data-parallel by
+    construction, so the only sharding decision is the replica axis itself.
+    Leaves whose leading dim does not divide the mesh group fall back to
+    replication (the same never-crash rule as :func:`spec_partition`) —
+    sweep inputs mix full-R leaves (TA banks, per-replica s/T) with
+    data-stream leaves of leading D | R, and each gets the best legal spec.
+    """
+    present = _mesh_axes_present(mesh, axes)
+    group = int(np.prod([mesh.shape[a] for a in present])) if present else 1
+    spec_axes = present if len(present) > 1 else (present[0] if present else None)
+
+    def one(x):
+        shape = getattr(x, "shape", ())
+        if present and len(shape) >= 1 and shape[0] % group == 0:
+            return NamedSharding(mesh, PS(spec_axes))
+        return NamedSharding(mesh, PS())
+
+    return jax.tree.map(
+        one, tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jax.Array)),
+    )
+
+
 def cache_shardings(cache_struct, mesh: Mesh, policy: ShardingPolicy):
     """KV/state cache shardings, key-aware.
 

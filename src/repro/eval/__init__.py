@@ -1,0 +1,2 @@
+"""Evaluation engines: cross-validation x hyperparameter sweeps (paper §3.6.1, §5)."""
+from repro.eval.crossval import CrossValRun, SweepResult, SystemResult  # noqa: F401

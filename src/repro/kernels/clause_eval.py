@@ -151,3 +151,95 @@ def clause_eval_batch(
     fired = (viol == 0).T.reshape(B, C, J)
     empty = (n_inc == 0).reshape(C, J)
     return jnp.where(empty[None], jnp.bool_(training), fired)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_counts_replicated(
+    include: jax.Array,   # [R, CJ, L] int8/bool — per-replica include banks
+    literals: jax.Array,  # [D, L] bool — replica r reads row r % D
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(violations [R, CJ] i32, n_included [R, CJ] i32) in ONE kernel launch.
+
+    Replica-first form of :func:`clause_counts`: a 2-D grid over
+    (replica, clause-block), each replica contracting its own include bank
+    against its data stream's literal row. The rhs BlockSpec maps replica
+    ``r`` to literal row ``r % D``, so a hyperparameter grid sharing one
+    ordering's data stream stores the rhs once per ordering.
+    """
+    R, cj, L = include.shape
+    D = literals.shape[0]
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Lp = -(-L // LANES) * LANES
+
+    inc = jnp.zeros((R, cjp, Lp), dtype=jnp.int8).at[:, :cj, :L].set(
+        include.astype(jnp.int8)
+    )
+    rhs = jnp.zeros((D, Lp, LANES), dtype=jnp.int8)
+    rhs = rhs.at[:, :L, 0].set(1 - literals.astype(jnp.int8))
+    rhs = rhs.at[:, :L, 1].set(1)
+
+    def _kernel3(inc_ref, rhs_ref, out_ref):
+        out_ref[...] = jnp.dot(
+            inc_ref[0], rhs_ref[0], preferred_element_type=jnp.int32
+        )[None]
+
+    out = pl.pallas_call(
+        _kernel3,
+        grid=(R, cjp // BLK_CJ),
+        in_specs=[
+            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, Lp, LANES), lambda r, i: (r % D, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i: (r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, cjp, LANES), jnp.int32),
+        interpret=interpret,
+    )(inc, rhs)
+    return out[:, :cj, 0], out[:, :cj, 1]
+
+
+def clause_eval_replicated(
+    include: jax.Array,   # [R, C, J, L] bool (post-fault TA actions)
+    literals: jax.Array,  # [D, L] bool — replica r reads row r % D
+    *,
+    training: bool,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed replica-first clause outputs [R, C, J] bool."""
+    R, C, J, L = include.shape
+    viol, n_inc = clause_counts_replicated(
+        include.reshape(R, C * J, L), literals, interpret=interpret
+    )
+    fired = viol == 0
+    empty = n_inc == 0
+    out = jnp.where(empty, jnp.bool_(training), fired)
+    return out.reshape(R, C, J)
+
+
+def clause_eval_batch_replicated(
+    include: jax.Array,   # [R, C, J, L] bool (post-fault TA actions)
+    literals: jax.Array,  # [D, B, L] bool — replica r reads batch r % D
+    *,
+    training: bool,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed replica-first batch clause outputs [R, B, C, J] bool.
+
+    vmap of :func:`clause_eval_batch` over replicas (pallas_call's batching
+    rule folds the replica axis into the kernel grid); the literal batches
+    are gathered per replica — the analysis pass runs once per sweep, so the
+    R/D-fold rhs tiling is irrelevant next to the per-step training planes.
+    """
+    R = include.shape[0]
+    D = literals.shape[0]
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    lits = jnp.take(literals, jnp.arange(R) % D, axis=0)  # [R, B, L]
+    return jax.vmap(
+        lambda inc, lit: clause_eval_batch(
+            inc, lit, training=training, interpret=interpret
+        )
+    )(include, lits)

@@ -23,6 +23,7 @@ backs which name; ``if cfg.backend == ...`` branches anywhere else are a bug.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, NamedTuple
 
 import jax
@@ -31,22 +32,45 @@ import jax
 class KernelBackend(NamedTuple):
     """The typed kernel contract every backend must implement.
 
-    All three entries are pure, trace-compatible functions:
+    All entries are pure, trace-compatible functions. Two orthogonal axes
+    run through the contract: *batch-first* entries stream many datapoints
+    through ONE machine, *replica-first* entries stream one datapoint each
+    through MANY independent machines (the cross-validation / hyperparameter
+    sweep axis — paper §3.6.1/§5, DESIGN.md §9). Replica-first operands
+    follow one layout rule: per-replica state/control carries a leading
+    ``R``; per-data-stream operands (literals, uniforms) carry a leading
+    ``D`` with ``D | R``, and replica ``r`` reads data row ``r % D`` — so a
+    hyperparameter grid over shared data stores each draw once.
 
     * ``clause_eval(include [C,J,L] bool, literals [L] bool, *, training)
       -> [C,J] bool`` — one datapoint's clause plane.
     * ``clause_eval_batch(include [C,J,L] bool, literals [B,L] bool, *,
       training) -> [B,C,J] bool`` — the batch-first entry point; MUST equal
       stacking ``clause_eval`` over rows bit-for-bit.
+    * ``clause_eval_replicated(include [R,C,J,L], literals [D,L], *,
+      training) -> [R,C,J]`` — replica-first clause plane; MUST equal
+      stacking ``clause_eval(include[r], literals[r % D])`` bit-for-bit.
+    * ``clause_eval_batch_replicated(include [R,C,J,L], literals [D,B,L], *,
+      training) -> [R,B,C,J]`` — replica-first analysis pass; MUST equal
+      stacking ``clause_eval_batch`` per replica bit-for-bit.
     * ``feedback_step(ta_state [C,J,L], literals [L], clause_out [C,J],
       type1_sel [C,J], type2_sel [C,J], u [C,J,L], *, s, n_states, s_policy,
       boost_true_positive) -> new ta_state`` — one datapoint's TA update.
+    * ``feedback_step_replicated(ta_state [R,C,J,L], literals [D,L],
+      clause_out [R,C,J], type1_sel [R,C,J], type2_sel [R,C,J], u [D,C,J,L],
+      *, s [R], n_states, s_policy, boost_true_positive) -> [R,C,J,L]`` —
+      R independent TA-bank updates in one fused plane (ref: one [R, C·J, L]
+      elementwise pass; pallas: a 2-D (replica, clause-block) grid); MUST
+      equal stacking ``feedback_step`` per replica bit-for-bit.
     """
 
     name: str
     clause_eval: Callable[..., jax.Array]
     clause_eval_batch: Callable[..., jax.Array]
+    clause_eval_replicated: Callable[..., jax.Array]
+    clause_eval_batch_replicated: Callable[..., jax.Array]
     feedback_step: Callable[..., jax.Array]
+    feedback_step_replicated: Callable[..., jax.Array]
 
 
 # Factories, not instances: "pallas" must not import Pallas machinery unless
@@ -67,6 +91,11 @@ def available() -> tuple[str, ...]:
 
 
 def _auto_name() -> str:
+    # TM_BACKEND overrides auto-resolution (CI runs the kernel/parity suite
+    # a second time with TM_BACKEND=pallas in interpret mode).
+    env = os.environ.get("TM_BACKEND")
+    if env:
+        return env
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
@@ -90,7 +119,10 @@ def _make_ref() -> KernelBackend:
         name="ref",
         clause_eval=ref.clause_eval,
         clause_eval_batch=ref.clause_eval_batch,
+        clause_eval_replicated=ref.clause_eval_replicated,
+        clause_eval_batch_replicated=ref.clause_eval_batch_replicated,
         feedback_step=ref.feedback_step,
+        feedback_step_replicated=ref.feedback_step_replicated,
     )
 
 
@@ -101,7 +133,10 @@ def _make_pallas() -> KernelBackend:
         name="pallas",
         clause_eval=ops.clause_eval,
         clause_eval_batch=ops.clause_eval_batch,
+        clause_eval_replicated=ops.clause_eval_replicated,
+        clause_eval_batch_replicated=ops.clause_eval_batch_replicated,
         feedback_step=ops.feedback_step,
+        feedback_step_replicated=ops.feedback_step_replicated,
     )
 
 

@@ -49,6 +49,34 @@ def _kernel(n_states: int, ta_ref, lit_ref, ctl_ref, u_ref, p_ref, out_ref):
     out_ref[...] = jnp.clip(ta + delta, 1, 2 * n_states).astype(out_ref.dtype)
 
 
+def _kernel_replicated(n_states: int, ta_ref, lit_ref, ctl_ref, u_ref, p_ref,
+                       out_ref):
+    # Refs carry a leading replica-block dim of 1: [1, BLK, Lp] / [1, 1, Lp].
+    ta = ta_ref[...].astype(jnp.int32)        # [1, BLK, Lp]
+    lit = lit_ref[...] != 0                   # [1, 1, Lp] bool
+    ctl = ctl_ref[...]                        # [1, BLK, LANES] int8
+    u = u_ref[...]                            # [1, BLK, Lp] f32
+    p = p_ref[...]                            # [1, 1, LANES] f32 (per-replica)
+
+    c_out = ctl[:, :, 0:1] != 0               # [1, BLK, 1]
+    t1 = ctl[:, :, 1:2] != 0
+    t2 = ctl[:, :, 2:3] != 0
+
+    p_strengthen = p[0:1, 0:1, 0:1]           # broadcasts over the plane
+    p_erase = p[0:1, 0:1, 1:2]
+
+    include = ta > n_states
+    strengthen = c_out & lit
+    d1 = jnp.where(
+        strengthen,
+        (u < p_strengthen).astype(jnp.int32),
+        -((u < p_erase).astype(jnp.int32)),
+    )
+    d2 = (c_out & (~lit) & (~include)).astype(jnp.int32)
+    delta = jnp.where(t1, d1, 0) + jnp.where(t2, d2, 0)
+    out_ref[...] = jnp.clip(ta + delta, 1, 2 * n_states).astype(out_ref.dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_states", "interpret")
 )
@@ -101,3 +129,73 @@ def feedback_plane(
         interpret=interpret,
     )(ta, lit, ctl, up, p)
     return out[:cj, :L]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_states", "interpret")
+)
+def feedback_plane_replicated(
+    ta_state: jax.Array,    # [R, CJ, L] int8/int16
+    literals: jax.Array,    # [D, L] bool — replica r reads row r % D
+    clause_out: jax.Array,  # [R, CJ] bool
+    type1_sel: jax.Array,   # [R, CJ] bool
+    type2_sel: jax.Array,   # [R, CJ] bool
+    u: jax.Array,           # [D, CJ, L] f32 — replica r reads row r % D
+    p_strengthen: jax.Array,  # [R] f32
+    p_erase: jax.Array,       # [R] f32
+    *,
+    n_states: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """R independent TA banks updated in ONE kernel launch.
+
+    2-D grid over (replica, clause-block): the FPGA's per-datapoint feedback
+    plane replicated spatially, the TPU form of the paper's cross-validation
+    re-runs. A vmap over :func:`feedback_plane` would pad and launch R
+    separate planes; here the replica axis is a grid dimension, so the i-th
+    clause block of every replica reuses the same tile program, and the
+    literal/uniform operands are *factored* — the BlockSpec index map sends
+    replica ``r`` to data row ``r % D``, so draws shared across a
+    hyperparameter grid are stored once, not R/D times.
+
+    Returns new ta_state [R, CJ, L].
+    """
+    R, cj, L = ta_state.shape
+    D = literals.shape[0]
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Lp = -(-L // LANES) * LANES
+    dt = ta_state.dtype
+
+    ta = jnp.ones((R, cjp, Lp), dtype=dt).at[:, :cj, :L].set(ta_state)
+    lit = jnp.zeros((D, 1, Lp), dtype=jnp.int8).at[:, 0, :L].set(
+        literals.astype(jnp.int8)
+    )
+    ctl = jnp.zeros((R, cjp, LANES), dtype=jnp.int8)
+    ctl = ctl.at[:, :cj, 0].set(clause_out.astype(jnp.int8))
+    ctl = ctl.at[:, :cj, 1].set(type1_sel.astype(jnp.int8))
+    ctl = ctl.at[:, :cj, 2].set(type2_sel.astype(jnp.int8))
+    # Pad u with 1.0 so padded lanes never draw an action.
+    up = jnp.ones((D, cjp, Lp), dtype=jnp.float32).at[:, :cj, :L].set(
+        u.astype(jnp.float32)
+    )
+    p = jnp.zeros((R, 1, LANES), dtype=jnp.float32)
+    p = p.at[:, 0, 0].set(p_strengthen.astype(jnp.float32))
+    p = p.at[:, 0, 1].set(p_erase.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_replicated, n_states),
+        grid=(R, cjp // BLK_CJ),
+        in_specs=[
+            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, 1, Lp), lambda r, i: (r % D, 0, 0)),
+            pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r % D, i, 0)),
+            pl.BlockSpec((1, 1, LANES), lambda r, i: (r, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, cjp, Lp), dt),
+        interpret=interpret,
+    )(ta, lit, ctl, up, p)
+    return out[:, :cj, :L]

@@ -35,6 +35,24 @@ def clause_eval_batch(
     )
 
 
+def clause_eval_replicated(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """[R, C, J, L] x [D, L] -> [R, C, J] (see ref.clause_eval_replicated)."""
+    return _ce.clause_eval_replicated(
+        include, literals, training=training, interpret=INTERPRET
+    )
+
+
+def clause_eval_batch_replicated(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """[R, C, J, L] x [D, B, L] -> [R, B, C, J] (see ref.clause_eval_batch_replicated)."""
+    return _ce.clause_eval_batch_replicated(
+        include, literals, training=training, interpret=INTERPRET
+    )
+
+
 def feedback_step(
     ta_state: jax.Array,
     literals: jax.Array,
@@ -66,3 +84,38 @@ def feedback_step(
         interpret=INTERPRET,
     )
     return out.reshape(C, J, L)
+
+
+def feedback_step_replicated(
+    ta_state: jax.Array,    # [R, C, J, L]
+    literals: jax.Array,    # [D, L] — replica r reads row r % D
+    clause_out: jax.Array,  # [R, C, J]
+    type1_sel: jax.Array,   # [R, C, J]
+    type2_sel: jax.Array,   # [R, C, J]
+    u: jax.Array,           # [D, C, J, L] — replica r reads row r % D
+    *,
+    s: jax.Array,           # [R] f32 (scalars broadcast)
+    n_states: int,
+    s_policy: str,
+    boost_true_positive: bool,
+) -> jax.Array:
+    """Same contract as ref.feedback_step_replicated: R TA banks, ONE launch
+    of the 2-D-grid (replica, clause-block) fused Pallas plane."""
+    R, C, J, L = ta_state.shape
+    D = literals.shape[0]
+    s = jnp.broadcast_to(jnp.asarray(s, dtype=jnp.float32), (R,))
+    p_strengthen = jnp.where(boost_true_positive, 1.0, (s - 1.0) / s)
+    p_erase = (1.0 / s) if s_policy == "standard" else (s - 1.0) / s
+    out = _fb.feedback_plane_replicated(
+        ta_state.reshape(R, C * J, L),
+        literals,
+        clause_out.reshape(R, C * J),
+        type1_sel.reshape(R, C * J),
+        type2_sel.reshape(R, C * J),
+        u.reshape(D, C * J, L),
+        p_strengthen,
+        jnp.asarray(p_erase, dtype=jnp.float32),
+        n_states=n_states,
+        interpret=INTERPRET,
+    )
+    return out.reshape(R, C, J, L)

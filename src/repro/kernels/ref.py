@@ -63,6 +63,56 @@ def clause_eval_loop(
     return jax.vmap(lambda l: clause_eval(include, l, training=training))(literals)
 
 
+def clause_eval_replicated(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """Replica-first clause eval: include [R, C, J, L] x literals [D, L] ->
+    [R, C, J].
+
+    Replica ``r`` evaluates against literal row ``r % D`` (``D`` must divide
+    ``R``). The cross-validation engine lays replicas out grid-major /
+    ordering-minor — replicas that share a data stream (one ordering trained
+    under many (s, T) cells) are adjacent modulo ``D``, so the literal bank is
+    stored once per *ordering* and broadcast across the hyperparameter grid
+    instead of being tiled ``R/D``-fold. MUST equal stacking
+    :func:`clause_eval` with ``(include[r], literals[r % D])`` bit-for-bit.
+    """
+    R, C, J, L = include.shape
+    D = literals.shape[0]
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    inc = include.reshape(R // D, D, C, J, L)
+    lit = literals[None, :, None, None, :]
+    fired = jnp.all(jnp.logical_or(~inc, lit), axis=-1)
+    empty = ~jnp.any(inc, axis=-1)
+    return jnp.where(empty, jnp.bool_(training), fired).reshape(R, C, J)
+
+
+def clause_eval_batch_replicated(
+    include: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """Replica-first batch eval: include [R, C, J, L] x literals [D, B, L] ->
+    [R, B, C, J].
+
+    One batched GEMM over all replicas (replica ``r`` reads literal batch
+    ``r % D``); the accuracy-analysis pass of the whole cross-validation sweep
+    is a single contraction. Violation counts are integers << 2^24, so f32
+    accumulation is exact and the result is bit-identical to stacking
+    :func:`clause_eval_batch` per replica.
+    """
+    R, C, J, L = include.shape
+    D, B, _ = literals.shape
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    inc = include.reshape(R // D, D, C * J, L).astype(jnp.float32)
+    neg = 1.0 - literals.astype(jnp.float32)                  # [D, B, L]
+    viol = jnp.einsum("hdkl,dbl->hdbk", inc, neg)
+    fired = (viol == 0).reshape(R // D, D, B, C, J)
+    empty = ~jnp.any(include, axis=-1).reshape(R // D, D, 1, C, J)
+    out = jnp.where(empty, jnp.bool_(training), fired)
+    return out.reshape(R, B, C, J)
+
+
 def feedback_step(
     ta_state: jax.Array,    # [C, J, L] int8/int16 (pre-update)
     literals: jax.Array,    # [L] bool
@@ -113,3 +163,69 @@ def feedback_step(
     )
     new_state = jnp.clip(ta_state.astype(jnp.int32) + delta, 1, 2 * n_states)
     return new_state.astype(ta_state.dtype)
+
+
+def feedback_step_replicated(
+    ta_state: jax.Array,    # [R, C, J, L] int8/int16 (pre-update)
+    literals: jax.Array,    # [D, L] bool — replica r reads row r % D
+    clause_out: jax.Array,  # [R, C, J] bool
+    type1_sel: jax.Array,   # [R, C, J] bool
+    type2_sel: jax.Array,   # [R, C, J] bool
+    u: jax.Array,           # [D, C, J, L] f32 — replica r reads row r % D
+    *,
+    s: jax.Array,           # [R] f32 (scalars broadcast)
+    n_states: int,
+    s_policy: str,
+    boost_true_positive: bool,
+) -> jax.Array:
+    """R independent TA banks updated as ONE fused elementwise plane.
+
+    This is the training half of the replica-parallel engine: every
+    (ordering x s x T) replica of a cross-validation sweep advances one
+    datapoint in a single [R, C·J, L] update instead of R separate
+    :func:`feedback_step` planes. Two things make it faster than a vmap of
+    the per-replica oracle without changing a single bit of the result:
+
+    * the uniforms (and literals) are *factored*: replicas sharing a data
+      stream (same ordering, different (s, T)) consume the same draws, so
+      ``u`` is stored once per data replica and broadcast across the grid
+      rather than tiled to [R, C, J, L];
+    * the delta arithmetic runs at the TA bank's native int8 width. Exact:
+      states are <= 2N <= 126 in int8, Type II applies only to excluded TAs
+      (state <= N), so ``state + delta`` never exceeds 127.
+
+    MUST be bit-identical to stacking ``feedback_step(ta[r], literals[r % D],
+    ..., u[r % D], s=s[r])`` over replicas — asserted in tests/test_kernels.py.
+    """
+    R, C, J, L = ta_state.shape
+    D = literals.shape[0]
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    H = R // D
+
+    s = jnp.broadcast_to(jnp.asarray(s, jnp.float32), (R,)).reshape(H, D, 1, 1, 1)
+    p_strengthen = jnp.where(boost_true_positive, 1.0, (s - 1.0) / s)
+    p_erase = (1.0 / s) if s_policy == "standard" else (s - 1.0) / s
+
+    ta = ta_state.reshape(H, D, C, J, L)
+    lit = literals[None, :, None, None, :]
+    uB = u[None]
+    c_out = clause_out.reshape(H, D, C, J)[..., None]
+    t1 = type1_sel.reshape(H, D, C, J)[..., None]
+    t2 = type2_sel.reshape(H, D, C, J)[..., None]
+    include = ta > n_states
+
+    # int8 states: all arithmetic stays int8 (exact — see docstring); wider
+    # states fall back to the oracle's int32 maths.
+    acc_dtype = jnp.int8 if ta_state.dtype == jnp.int8 else jnp.int32
+
+    strengthen = c_out & lit
+    d1 = jnp.where(
+        strengthen,
+        (uB < p_strengthen).astype(acc_dtype),
+        -((uB < p_erase).astype(acc_dtype)),
+    )
+    d2 = (c_out & ~lit & ~include).astype(acc_dtype)
+    delta = jnp.where(t1, d1, 0) + jnp.where(t2, d2, 0)
+    new_state = jnp.clip(ta.astype(acc_dtype) + delta, 1, 2 * n_states)
+    return new_state.reshape(R, C, J, L).astype(ta_state.dtype)

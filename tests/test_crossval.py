@@ -1,0 +1,262 @@
+"""Replica-parallel cross-validation engine (repro.eval.crossval).
+
+The engine's contract is *bit-exactness*: the fused sweep must reproduce the
+per-cell reference (``hpsearch._one_cell``) and the legacy vmap-of-scan
+program exactly, not approximately — any drift means the replica plane no
+longer implements the paper's machine. The fast tests run a subsample
+grid; ``-m slow`` runs the paper's full 120-ordering iris sweep.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# CI's kernel-parity job re-runs this suite with TM_BACKEND=pallas so the
+# engine itself is exercised through the Pallas kernels (interpret mode).
+ENV_BACKEND = os.environ.get("TM_BACKEND", "ref")
+
+from repro.core import feedback as fb_mod
+from repro.core import hpsearch
+from repro.core import manager as mgr
+from repro.core import tm as tm_mod
+from repro.core.tm import TMConfig
+from repro.data import blocks
+from repro.eval.crossval import CrossValRun, grid_layout, replicate_state
+
+CFG = TMConfig(n_features=16, max_classes=3, max_clauses=16, n_states=16,
+               backend=ENV_BACKEND)
+
+
+@pytest.fixture(scope="module")
+def iris_osets():
+    osets, _ = blocks.iris_paper_sets(n_orderings=6)
+    return osets
+
+
+def _loop_one_cell(cfg, osets, s_values, T_values, n_epochs, seed):
+    """The reference semantics: one `_one_cell` per (s, T, ordering)."""
+    O = osets.offline_x.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(seed), O)
+    out = np.zeros((len(s_values), len(T_values), O), np.float32)
+    for si, s in enumerate(s_values):
+        for ti, T in enumerate(T_values):
+            for o in range(O):
+                out[si, ti, o] = hpsearch._one_cell(
+                    cfg, jnp.float32(s), jnp.int32(T),
+                    jnp.asarray(osets.offline_x[o]),
+                    jnp.asarray(osets.offline_y[o]),
+                    jnp.asarray(osets.validation_x[o]),
+                    jnp.asarray(osets.validation_y[o]),
+                    keys[o], n_epochs,
+                )
+    return out
+
+
+def test_sweep_bitwise_identical_to_one_cell_loop(iris_osets):
+    """CrossValRun.sweep == looping hpsearch._one_cell, bit for bit."""
+    s_values, T_values = (1.375, 3.0), (5, 15)
+    res = CrossValRun(CFG).sweep(
+        iris_osets.offline_x, iris_osets.offline_y,
+        iris_osets.validation_x, iris_osets.validation_y,
+        s_values, T_values, n_epochs=4, seed=0,
+    )
+    want = _loop_one_cell(CFG, iris_osets, s_values, T_values, 4, 0)
+    np.testing.assert_array_equal(want, np.asarray(res.val_accuracy))
+    # mean over orderings, reduced by the same device op as the engine
+    np.testing.assert_array_equal(
+        np.asarray(jnp.mean(jnp.asarray(want), axis=-1)),
+        np.asarray(res.mean_accuracy),
+    )
+
+
+def test_sweep_bitwise_identical_to_legacy_vmap(iris_osets):
+    """Engine == the pre-replica vmap-of-scan grid program, bit for bit."""
+    s_values, T_values = (1.375, 2.0, 3.0), (5, 10, 15)
+    keys = jax.random.split(jax.random.PRNGKey(0), 6)
+    want = hpsearch.grid_search_device(
+        CFG,
+        jnp.asarray(s_values, jnp.float32), jnp.asarray(T_values, jnp.int32),
+        (jnp.asarray(iris_osets.offline_x), jnp.asarray(iris_osets.offline_y)),
+        (jnp.asarray(iris_osets.validation_x),
+         jnp.asarray(iris_osets.validation_y)),
+        keys, 4,
+    )
+    res = CrossValRun(CFG).sweep(
+        iris_osets.offline_x, iris_osets.offline_y,
+        iris_osets.validation_x, iris_osets.validation_y,
+        s_values, T_values, n_epochs=4, seed=0,
+    )
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(res.val_accuracy))
+
+
+def test_grid_search_is_thin_engine_caller(iris_osets):
+    """hpsearch.grid_search returns engine results in the GridResult shape."""
+    gr = hpsearch.grid_search(
+        CFG, (1.375, 3.0), (5, 15),
+        iris_osets.offline_x, iris_osets.offline_y,
+        iris_osets.validation_x, iris_osets.validation_y,
+        n_epochs=4, seed=0,
+    )
+    res = CrossValRun(CFG).sweep(
+        iris_osets.offline_x, iris_osets.offline_y,
+        iris_osets.validation_x, iris_osets.validation_y,
+        (1.375, 3.0), (5, 15), n_epochs=4, seed=0,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(gr.val_accuracy), np.asarray(res.val_accuracy)
+    )
+    s, T, acc = hpsearch.best(gr)
+    assert s in (1.375, 3.0) and T in (5, 15) and 0.0 <= acc <= 1.0
+
+
+def test_grid_layout_is_grid_major_ordering_minor():
+    s_rep, T_rep = grid_layout((1.0, 2.0), (5, 10, 15), 4)
+    R = 2 * 3 * 4
+    assert s_rep.shape == T_rep.shape == (R,)
+    for r in range(R):
+        si, rest = divmod(r, 3 * 4)
+        ti, _o = divmod(rest, 4)
+        assert float(s_rep[r]) == (1.0, 2.0)[si]
+        assert int(T_rep[r]) == (5, 10, 15)[ti]
+
+
+def test_sweep_offline_valid_mask(iris_osets):
+    """offline_valid restricts training rows exactly like train_epochs'
+    valid mask (the §5.1 limited-data budget)."""
+    O = iris_osets.offline_x.shape[0]
+    n = iris_osets.offline_x.shape[1]
+    valid = np.zeros((O, n), dtype=bool)
+    valid[:, :20] = True
+    res = CrossValRun(CFG).sweep(
+        iris_osets.offline_x, iris_osets.offline_y,
+        iris_osets.validation_x, iris_osets.validation_y,
+        (1.375,), (15,), n_epochs=3, seed=1, offline_valid=valid,
+    )
+    # reference: single replica trained on the first 20 rows only
+    keys = jax.random.split(jax.random.PRNGKey(1), O)
+    rt = tm_mod.init_runtime(CFG, s=1.375, T=15)
+    st = fb_mod.train_epochs(
+        CFG, tm_mod.init_state(CFG), rt,
+        jnp.asarray(iris_osets.offline_x[0]),
+        jnp.asarray(iris_osets.offline_y[0]),
+        keys[0], 3, valid=jnp.asarray(valid[0]),
+    )
+    from repro.core import accuracy as acc_mod
+
+    want = acc_mod.analyze(
+        CFG, st, rt,
+        jnp.asarray(iris_osets.validation_x[0]),
+        jnp.asarray(iris_osets.validation_y[0]),
+    )
+    assert float(want) == float(res.val_accuracy[0, 0, 0])
+
+
+def test_sweep_with_mesh_sharding(iris_osets):
+    """A mesh-sharded sweep (replica axis over the data mesh axis) is
+    bit-identical to the unsharded program."""
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    base = CrossValRun(CFG).sweep(
+        iris_osets.offline_x, iris_osets.offline_y,
+        iris_osets.validation_x, iris_osets.validation_y,
+        (1.375, 3.0), (5, 15), n_epochs=3, seed=0,
+    )
+    sharded = CrossValRun(CFG, mesh=mesh).sweep(
+        iris_osets.offline_x, iris_osets.offline_y,
+        iris_osets.validation_x, iris_osets.validation_y,
+        (1.375, 3.0), (5, 15), n_epochs=3, seed=0,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(base.val_accuracy), np.asarray(sharded.val_accuracy)
+    )
+
+
+def test_replica_shardings_specs():
+    from jax.sharding import Mesh, PartitionSpec as PS
+
+    from repro.distributed import sharding as shard_mod
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    tree = {
+        "state": jax.ShapeDtypeStruct((8, 3, 16, 32), jnp.int8),
+        "scalar": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    sh = shard_mod.replica_shardings(tree, mesh)
+    assert sh["state"].spec == PS("data")
+    assert sh["scalar"].spec == PS()
+
+
+def test_replicate_state_matches_init():
+    st = replicate_state(CFG, 5)
+    base = tm_mod.init_state(CFG)
+    assert st.ta_state.shape == (5,) + base.ta_state.shape
+    for r in range(5):
+        np.testing.assert_array_equal(
+            np.asarray(st.ta_state[r]), np.asarray(base.ta_state)
+        )
+
+
+def test_system_engine_matches_run_system_loop(iris_osets):
+    """CrossValRun.system == per-ordering run_system, bit for bit (the
+    engine behind manager.run_orderings)."""
+    O = 3
+    sys_cfg = mgr.SystemConfig(n_offline_epochs=2, n_online_cycles=3)
+    schedule = mgr.make_schedule(online_s=1.0)
+    n_off = iris_osets.offline_x.shape[1]
+
+    def sets_for(o):
+        return mgr.Sets(
+            offline_x=jnp.asarray(iris_osets.offline_x[o]),
+            offline_y=jnp.asarray(iris_osets.offline_y[o]),
+            offline_valid=jnp.ones(n_off, dtype=bool),
+            validation_x=jnp.asarray(iris_osets.validation_x[o]),
+            validation_y=jnp.asarray(iris_osets.validation_y[o]),
+            validation_valid=jnp.ones(
+                iris_osets.validation_x.shape[1], dtype=bool),
+            online_x=jnp.asarray(iris_osets.online_x[o]),
+            online_y=jnp.asarray(iris_osets.online_y[o]),
+            online_valid=jnp.ones(iris_osets.online_x.shape[1], dtype=bool),
+        )
+
+    sets_list = [sets_for(o) for o in range(O)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *sets_list)
+    states = replicate_state(CFG, O)
+    keys = jax.random.split(jax.random.PRNGKey(3), O)
+    rt = tm_mod.init_runtime(CFG, s=1.375, T=15)
+
+    res = CrossValRun(CFG).system(sys_cfg, states, rt, stacked, schedule, keys)
+    assert res.replicas == O
+    for o in range(O):
+        _, accs_o, act_o = mgr.run_system(
+            CFG, sys_cfg, tm_mod.init_state(CFG), rt, sets_list[o],
+            schedule, keys[o],
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.accuracies[o]), np.asarray(accs_o)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.activity[o]), np.asarray(act_o)
+        )
+
+
+@pytest.mark.slow
+def test_full_iris_sweep_bitwise_identical_to_one_cell_loop():
+    """Acceptance: the paper's full 5-block sweep — ALL 120 orderings x a
+    3x3 (s, T) grid — through CrossValRun equals looping _one_cell exactly."""
+    osets, _ = blocks.iris_paper_sets(n_orderings=120)
+    s_values, T_values = (1.375, 2.0, 3.0), (5, 10, 15)
+    res = CrossValRun(CFG).sweep(
+        osets.offline_x, osets.offline_y,
+        osets.validation_x, osets.validation_y,
+        s_values, T_values, n_epochs=10, seed=0,
+    )
+    assert res.replicas == 3 * 3 * 120
+    want = _loop_one_cell(CFG, osets, s_values, T_values, 10, 0)
+    np.testing.assert_array_equal(want, np.asarray(res.val_accuracy))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.mean(jnp.asarray(want), axis=-1)),
+        np.asarray(res.mean_accuracy),
+    )

@@ -83,6 +83,101 @@ def test_feedback_states_stay_in_bounds():
     assert o.min() >= 1 and o.max() <= 2 * n
 
 
+# Replica-parallel shapes: (R, D, C, J, L) with odd sizes that straddle the
+# int8 32x128 tile boundaries, plus grid-sharing layouts (D < R).
+REP_SHAPES = [
+    (1, 1, 1, 2, 5),       # degenerate single replica
+    (3, 1, 2, 6, 17),      # one data stream shared by 3 grid cells
+    (6, 3, 3, 16, 32),     # the iris machine, 2x3 grid-over-orderings
+    (5, 5, 2, 7, 33),      # replicas == data streams (system path), odd L
+    (4, 2, 4, 33, 129),    # one over both tile boundaries
+]
+
+
+def _rep_inputs(R, D, C, J, L, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "include": jnp.asarray(rng.random((R, C, J, L)) < 0.3),
+        "lits": jnp.asarray(rng.random((D, L)) < 0.5),
+        "rng": rng,
+    }
+
+
+@pytest.mark.parametrize("shape", REP_SHAPES)
+@pytest.mark.parametrize("mod", [ref, ops], ids=["ref", "pallas"])
+def test_clause_eval_replicated_matches_stacked(shape, mod):
+    R, D, C, J, L = shape
+    inp = _rep_inputs(*shape, seed=hash(shape) % 2**31)
+    for training in (True, False):
+        want = jnp.stack([
+            ref.clause_eval(inp["include"][r], inp["lits"][r % D],
+                            training=training)
+            for r in range(R)
+        ])
+        got = mod.clause_eval_replicated(
+            inp["include"], inp["lits"], training=training
+        )
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("shape", REP_SHAPES)
+@pytest.mark.parametrize("mod", [ref, ops], ids=["ref", "pallas"])
+def test_clause_eval_batch_replicated_matches_stacked(shape, mod):
+    R, D, C, J, L = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    include = jnp.asarray(rng.random((R, C, J, L)) < 0.3)
+    lits = jnp.asarray(rng.random((D, 5, L)) < 0.5)
+    for training in (True, False):
+        want = jnp.stack([
+            ref.clause_eval_batch(include[r], lits[r % D], training=training)
+            for r in range(R)
+        ])
+        got = mod.clause_eval_batch_replicated(include, lits, training=training)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("shape", REP_SHAPES)
+@pytest.mark.parametrize("policy", ["standard", "hardware"])
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16])
+@pytest.mark.parametrize("mod", [ref, ops], ids=["ref", "pallas"])
+def test_feedback_replicated_matches_stacked(shape, policy, dtype, mod):
+    """feedback_step_replicated == stacking per-replica feedback_step calls,
+    bit for bit, on both backends (pallas in interpret mode)."""
+    R, D, C, J, L = shape
+    n_states = 50 if dtype == jnp.int8 else 5000
+    rng = np.random.default_rng(hash((shape, policy)) % 2**31)
+    ta = jnp.asarray(rng.integers(1, 2 * n_states + 1, (R, C, J, L)), dtype=dtype)
+    lits = jnp.asarray(rng.random((D, L)) < 0.5)
+    c_out = jnp.asarray(rng.random((R, C, J)) < 0.5)
+    t1 = jnp.asarray(rng.random((R, C, J)) < 0.5)
+    t2 = jnp.asarray(rng.random((R, C, J)) < 0.3) & ~t1
+    u = jnp.asarray(rng.random((D, C, J, L)), dtype=jnp.float32)
+    s = jnp.asarray(1.0 + 5.0 * rng.random(R), dtype=jnp.float32)
+    for boost in (True, False):
+        kw = dict(n_states=n_states, s_policy=policy, boost_true_positive=boost)
+        want = jnp.stack([
+            ref.feedback_step(ta[r], lits[r % D], c_out[r], t1[r], t2[r],
+                              u[r % D], s=s[r], **kw)
+            for r in range(R)
+        ])
+        got = mod.feedback_step_replicated(
+            ta, lits, c_out, t1, t2, u, s=s, **kw
+        )
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_feedback_replicated_rejects_bad_data_axis():
+    ta = jnp.ones((4, 1, 2, 8), dtype=jnp.int8)
+    lits = jnp.zeros((3, 8), dtype=bool)  # 3 does not divide 4
+    with pytest.raises(ValueError, match="must divide"):
+        ref.feedback_step_replicated(
+            ta, lits, jnp.zeros((4, 1, 2), bool), jnp.zeros((4, 1, 2), bool),
+            jnp.zeros((4, 1, 2), bool), jnp.zeros((3, 1, 2, 8), jnp.float32),
+            s=jnp.ones(4), n_states=3, s_policy="standard",
+            boost_true_positive=True,
+        )
+
+
 def test_end_to_end_backend_parity():
     """Full TM training is bit-exact between ref and pallas backends."""
     from repro.core import TMConfig, init_runtime, init_state, train_epochs

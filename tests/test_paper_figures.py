@@ -1,0 +1,210 @@
+"""Statistical paper-faithfulness tests (paper §5, Figures 4-9).
+
+Seeded small-scale runs of the paper's three use cases through the
+replica-parallel engine (CrossValRun.system), asserting tolerance bands on
+the behaviours the figures claim rather than exact values:
+
+* Fig 4  — online learning on labelled data after a limited (20-of-30)
+  offline set: accuracy ordering (offline-set accuracy starts highest) and
+  validation/online gains exceeding the offline gain.
+* Fig 5/6/7 — class introduction at runtime: a frozen system drops and
+  stays down, an online system dips then recovers.
+* Fig 8/9 — stuck-at-0 fault injection (core/faults.py): a frozen system's
+  accuracy drops and stays down; online learning ends clearly above it.
+
+The tier-1 bands were calibrated over seeds 0..4 at this scale and are
+asserted for seeds {0, 1, 2} in CI; ``-m slow`` re-runs the same claims at
+the benchmark scale (24 orderings, 16 cycles, the paper's injection cycle).
+Every run is deterministic: same seed -> same curves, bit for bit.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.tm_iris import CONFIG as TM_SYS
+from repro.core import faults as faults_mod
+from repro.core import manager as mgr
+from repro.core import tm as tm_mod
+from repro.data import blocks
+from repro.eval.crossval import CrossValRun, replicate_state
+
+CFG = TM_SYS.tm
+SEEDS = [0, 1, 2]
+FAULT_FRACTION = 0.75  # stuck-at-0 spread wide enough to dent iris accuracy
+
+
+@functools.lru_cache(maxsize=4)
+def _sets(n_orderings: int, offline_limit):
+    osets, _ = blocks.iris_paper_sets(n_orderings=n_orderings)
+    O, n_off = osets.offline_y.shape
+    train_valid = np.ones((O, n_off), dtype=bool)
+    if offline_limit is not None:
+        train_valid[:, offline_limit:] = False
+    return mgr.Sets(
+        offline_x=jnp.asarray(osets.offline_x),
+        offline_y=jnp.asarray(osets.offline_y),
+        offline_valid=jnp.ones((O, n_off), dtype=bool),
+        validation_x=jnp.asarray(osets.validation_x),
+        validation_y=jnp.asarray(osets.validation_y),
+        validation_valid=jnp.ones(osets.validation_y.shape, dtype=bool),
+        online_x=jnp.asarray(osets.online_x),
+        online_y=jnp.asarray(osets.online_y),
+        online_valid=jnp.ones(osets.online_y.shape, dtype=bool),
+        offline_train_valid=jnp.asarray(train_valid),
+    ), O
+
+
+def _mean_curves(schedule, *, seed, n_orderings=6, n_cycles=8,
+                 offline_limit=20):
+    """Mean accuracy curves [1 + n_cycles, 3] over orderings via the engine."""
+    sets, O = _sets(n_orderings, offline_limit)
+    sys_cfg = mgr.SystemConfig(
+        n_offline_epochs=TM_SYS.n_offline_epochs, n_online_cycles=n_cycles
+    )
+    rt = tm_mod.init_runtime(CFG, s=TM_SYS.s_offline, T=TM_SYS.T)
+    states = replicate_state(CFG, O)
+    keys = jax.random.split(jax.random.PRNGKey(seed), O)
+    res = CrossValRun(CFG).system(sys_cfg, states, rt, sets, schedule, keys)
+    return np.asarray(res.accuracies).mean(axis=0)
+
+
+# One schedule object per scenario, shared across seeds so the compiled
+# system program is traced once per (schedule, scale).
+SCHED_FIG4 = mgr.make_schedule(online_s=1.0)
+SCHED_FIG5 = mgr.make_schedule(online_s=1.0, filtered_class=0)
+
+
+def _sched_intro(introduce_at, online):
+    return mgr.make_schedule(
+        online_s=1.0, filtered_class=0, introduce_at_cycle=introduce_at,
+        online_enabled=online,
+    )
+
+
+def _sched_fault(inject_at, online):
+    and_m, or_m = faults_mod.even_spread_stuck_at(CFG, FAULT_FRACTION, 0)
+    return mgr.make_schedule(
+        online_s=1.0, fault_masks=(jnp.asarray(and_m), jnp.asarray(or_m)),
+        inject_at_cycle=inject_at, online_enabled=online,
+    )
+
+
+SCHED_FIG6 = _sched_intro(3, online=False)
+SCHED_FIG7 = _sched_intro(3, online=True)
+SCHED_FIG8 = _sched_fault(3, online=False)
+SCHED_FIG9 = _sched_fault(3, online=True)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fig4_limited_data_accuracy_ordering(seed):
+    c = _mean_curves(SCHED_FIG4, seed=seed)
+    start_off, start_val, start_onl = c[0]
+    gain_off, gain_val, gain_onl = c[-1] - c[0]
+
+    # Starting ordering (paper: 83% offline > 79.5% validation/online): the
+    # trained-on set leads the held-out sets.
+    assert start_off >= start_val + 0.05, (start_off, start_val)
+    assert 0.70 <= start_val <= 0.90, start_val
+    assert 0.70 <= start_onl <= 0.90, start_onl
+
+    # Online learning lifts the held-out sets more than the offline set
+    # (paper: ~+12% val/online vs ~+5% offline at full scale).
+    assert gain_val >= 0.02, gain_val
+    assert gain_onl >= 0.02, gain_onl
+    assert gain_val >= gain_off + 0.02, (gain_val, gain_off)
+    assert gain_onl >= gain_off + 0.02, (gain_onl, gain_off)
+    assert c[-1, 1] >= 0.84, c[-1, 1]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fig567_class_introduction_recovery(seed):
+    intro = 3
+    c5 = _mean_curves(SCHED_FIG5, seed=seed, offline_limit=None)
+    c6 = _mean_curves(SCHED_FIG6, seed=seed, offline_limit=None)
+    c7 = _mean_curves(SCHED_FIG7, seed=seed, offline_limit=None)
+
+    # Fig 5 baseline: with the class filtered forever, the 2-class problem
+    # stays solved (no spurious degradation from the over-provisioned slot).
+    assert c5[-1, 1] >= c5[0, 1] - 0.02, (c5[0, 1], c5[-1, 1])
+
+    # Fig 6: introduction with online learning DISABLED — the validation
+    # accuracy drops hard at the first post-introduction analysis...
+    drop = c6[intro + 1, 1] - c6[intro, 1]
+    assert drop <= -0.15, drop
+    # ...and stays down (a frozen machine cannot learn the new class).
+    np.testing.assert_allclose(c6[intro + 1:, 1], c6[intro + 1, 1], atol=1e-6)
+    assert c6[-1, 1] <= 0.70, c6[-1, 1]
+
+    # Fig 7: with online learning the machine dips then RECOVERS.
+    dip = c7[intro + 1, 1]
+    assert c7[-1, 1] >= dip + 0.02, (dip, c7[-1, 1])
+    assert c7[-1, 1] >= 0.82, c7[-1, 1]
+    assert c7[-1, 1] >= c6[-1, 1] + 0.15, (c7[-1, 1], c6[-1, 1])
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fig89_fault_drop_then_recover(seed):
+    inject = 3
+    c8 = _mean_curves(SCHED_FIG8, seed=seed)
+    c9 = _mean_curves(SCHED_FIG9, seed=seed)
+
+    # Fig 8: frozen system — accuracy drops at the first post-injection
+    # analysis and stays down.
+    drop = c8[inject + 1, 1] - c8[inject, 1]
+    assert drop <= -0.05, drop
+    np.testing.assert_allclose(c8[inject + 1:, 1], c8[inject + 1, 1], atol=1e-6)
+
+    # Fig 9: online system — dips at injection, then ends clearly above the
+    # frozen system (the paper's mitigation claim).
+    dip = c9[inject + 1, 1] - c9[inject, 1]
+    assert dip <= -0.04, dip
+    assert c9[-1, 1] >= c9[inject + 1, 1] - 0.06  # no further decay
+    assert c9[-1, 1] >= c8[-1, 1] + 0.04, (c9[-1, 1], c8[-1, 1])
+
+
+# --------------------------------------------------------------------------
+# Full-scale variants (benchmark scale: 24 orderings, 16 cycles, the
+# paper's injection/introduction cycle 5). `pytest -m slow`.
+# --------------------------------------------------------------------------
+
+SLOW = dict(n_orderings=24, n_cycles=16)
+
+
+@pytest.mark.slow
+def test_fig4_full_scale():
+    c = _mean_curves(SCHED_FIG4, seed=0, **SLOW)
+    start_off, start_val, start_onl = c[0]
+    gain_off, gain_val, gain_onl = c[-1] - c[0]
+    assert start_off >= start_val + 0.05
+    assert 0.72 <= start_val <= 0.88
+    assert gain_val >= 0.04 and gain_onl >= 0.04
+    assert gain_val >= gain_off + 0.03
+    assert c[-1, 1] >= 0.85
+
+
+@pytest.mark.slow
+def test_fig567_full_scale():
+    intro = 5
+    sched6 = _sched_intro(intro, online=False)
+    sched7 = _sched_intro(intro, online=True)
+    c6 = _mean_curves(sched6, seed=0, offline_limit=None, **SLOW)
+    c7 = _mean_curves(sched7, seed=0, offline_limit=None, **SLOW)
+    assert c6[intro + 1, 1] - c6[intro, 1] <= -0.15
+    np.testing.assert_allclose(c6[intro + 1:, 1], c6[intro + 1, 1], atol=1e-6)
+    assert c7[-1, 1] >= c7[intro + 1, 1] + 0.02
+    assert c7[-1, 1] >= c6[-1, 1] + 0.15
+
+
+@pytest.mark.slow
+def test_fig89_full_scale():
+    inject = 5
+    sched8 = _sched_fault(inject, online=False)
+    sched9 = _sched_fault(inject, online=True)
+    c8 = _mean_curves(sched8, seed=0, **SLOW)
+    c9 = _mean_curves(sched9, seed=0, **SLOW)
+    assert c8[inject + 1, 1] - c8[inject, 1] <= -0.05
+    np.testing.assert_allclose(c8[inject + 1:, 1], c8[inject + 1, 1], atol=1e-6)
+    assert c9[-1, 1] >= c8[-1, 1] + 0.04

@@ -122,3 +122,128 @@ def test_ring_buffer_model(cap, ops_seq):
             if model:
                 assert int(y) == model.popleft()
         assert int(buf.size) == len(model)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cap=st.integers(1, 10),
+    vals=st.lists(st.integers(0, 999), min_size=0, max_size=40),
+    extra_pops=st.integers(0, 5),
+)
+def test_ring_buffer_fifo_capacity_and_empty_pop(cap, vals, extra_pops):
+    """RingBuffer invariants: FIFO order preserved, size never exceeds
+    capacity, pop-on-empty is a no-op flagged by nonempty=False."""
+    from repro.data import buffer
+
+    buf = buffer.make(cap, 3)
+    accepted = []
+    for v in vals:
+        buf, ok = buffer.push(
+            buf, jnp.asarray([v % 2, (v >> 1) % 2, 1], dtype=bool), jnp.int32(v)
+        )
+        if bool(ok):
+            accepted.append(v)
+        assert 0 <= int(buf.size) <= cap  # size never exceeds capacity
+
+    popped = []
+    for _ in range(len(accepted) + extra_pops):
+        before = jax.tree.map(np.asarray, buf)
+        buf, x, y, nonempty = buffer.pop(buf)
+        if bool(nonempty):
+            popped.append(int(y))
+        else:
+            # pop-on-empty: flagged, and the buffer state is untouched
+            after = jax.tree.map(np.asarray, buf)
+            for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+                np.testing.assert_array_equal(a, b)
+    assert popped == accepted  # FIFO order, accepted rows only
+    assert int(buf.size) == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    block_len=st.integers(1, 8),
+    blocks_split=st.tuples(
+        st.integers(1, 3), st.integers(1, 3), st.integers(1, 3)
+    ),
+    n_orderings=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_orderings_partition_dataset(
+    block_len, blocks_split, n_orderings, seed
+):
+    """Every ordering partitions the dataset exactly; set sizes match
+    BlockSpec.sizes()."""
+    from repro.data import blocks
+
+    a, b, c = blocks_split
+    spec = blocks.BlockSpec(
+        block_len=block_len, offline_blocks=a,
+        validation_blocks=b, online_blocks=c,
+    )
+    n = spec.n_blocks * block_len
+    rng = np.random.default_rng(seed)
+    xs = rng.random((n, 4)) < 0.5
+    ys = np.arange(n, dtype=np.int32)  # unique labels -> exact partition check
+
+    orderings = blocks.select_orderings(spec.n_blocks, n_orderings, seed=seed)
+    sets = blocks.make_sets(xs, ys, spec, orderings)
+
+    assert sets.offline_y.shape[1:] == (spec.sizes()[0],)
+    assert sets.validation_y.shape[1:] == (spec.sizes()[1],)
+    assert sets.online_y.shape[1:] == (spec.sizes()[2],)
+    for o in range(len(orderings)):
+        labels = np.concatenate(
+            [sets.offline_y[o], sets.validation_y[o], sets.online_y[o]]
+        )
+        # exactly the original rows, each exactly once
+        np.testing.assert_array_equal(np.sort(labels), ys)
+        # and x rows ride along with their labels
+        rows = np.concatenate(
+            [sets.offline_x[o], sets.validation_x[o], sets.online_x[o]]
+        )
+        np.testing.assert_array_equal(rows[np.argsort(labels)], xs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    shape=st.tuples(
+        st.integers(1, 3),                        # H (grid cells per stream)
+        st.integers(1, 3),                        # D (data streams)
+        st.integers(1, 3),                        # classes
+        st.integers(1, 6).map(lambda j: 2 * j),   # clauses (even)
+        st.integers(1, 40),                       # literals
+    ),
+    policy=st.sampled_from(["standard", "hardware"]),
+)
+def test_kernel_feedback_replicated_equals_stacked_oracle(seed, shape, policy):
+    """Property form of the replica parity contract: for any R = H*D layout,
+    feedback_step_replicated == stacked per-replica feedback_step, bitwise,
+    on both backends."""
+    H, D, C, J, L = shape
+    R = H * D
+    n = 50
+    rng = np.random.default_rng(seed)
+    ta = jnp.asarray(rng.integers(1, 2 * n + 1, (R, C, J, L)), dtype=jnp.int8)
+    lits = jnp.asarray(rng.random((D, L)) < 0.5)
+    c_out = jnp.asarray(rng.random((R, C, J)) < 0.5)
+    t1 = jnp.asarray(rng.random((R, C, J)) < 0.5)
+    t2 = jnp.asarray(rng.random((R, C, J)) < 0.5) & ~t1
+    u = jnp.asarray(rng.random((D, C, J, L)), dtype=jnp.float32)
+    s = jnp.asarray(1.0 + 5.0 * rng.random(R), dtype=jnp.float32)
+    kw = dict(n_states=n, s_policy=policy, boost_true_positive=bool(seed % 2))
+    want = np.stack([
+        np.asarray(ref.feedback_step(
+            ta[r], lits[r % D], c_out[r], t1[r], t2[r], u[r % D], s=s[r], **kw
+        ))
+        for r in range(R)
+    ])
+    for mod in (ref, ops):
+        got = np.asarray(mod.feedback_step_replicated(
+            ta, lits, c_out, t1, t2, u, s=s, **kw
+        ))
+        np.testing.assert_array_equal(want, got)
+    # Invariants survive replication: states in [1, 2N], |delta| <= 1 per TA.
+    assert want.min() >= 1 and want.max() <= 2 * n
+    assert np.abs(want.astype(int) - np.asarray(ta, dtype=int)).max() <= 1

@@ -62,6 +62,54 @@ def test_tm_online_session_buffers_and_learns():
     assert acc > 0.5
 
 
+def test_tm_online_session_on_chunk_monitoring():
+    """learn_available's on_chunk hook surfaces ChunkAux (Fig. 3 analysis)
+    without a second inference pass — and without it monitoring stays off."""
+    from repro.core import TMConfig, init_runtime, init_state
+    from repro.core import tm as tm_mod
+    from repro.core.online import OnlineSession
+    from repro.data import iris
+
+    cfg = TMConfig(n_features=16, max_classes=3, max_clauses=16, n_states=16)
+    xs, ys = iris.load()
+    chunks = []
+
+    sess = OnlineSession(cfg, init_state(cfg), init_runtime(cfg, s=3.0, T=15),
+                         buffer_capacity=64, chunk=16, seed=7)
+    for i in range(40):
+        sess.offer(xs[i], int(ys[i]))
+    trained = sess.learn_available(40, on_chunk=chunks.append)
+    assert trained == 40
+    # 40 points through chunk=16 -> 16 + 16 + 8-valid chunks
+    assert [int(c.valid.sum()) for c in chunks] == [16, 16, 8]
+    for c in chunks:
+        # correct rows must be flagged valid; activity only on valid rows
+        assert not np.any(np.asarray(c.correct) & ~np.asarray(c.valid))
+        assert np.all(np.asarray(c.activity)[~np.asarray(c.valid)] == 0.0)
+
+    # The last chunk's predictions are made under the post-chunk state, which
+    # is the session's current state: they must match a fresh predict_batch.
+    last = chunks[-1]
+    valid = np.asarray(last.valid)
+    rows = np.asarray(xs[32:40], dtype=bool)
+    want = np.asarray(
+        tm_mod.predict_batch(cfg, sess.ss.tm, sess.rt, jnp.asarray(rows))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(last.predicted)[valid][: len(rows)], want
+    )
+
+    # Same drain without the hook: monitoring compiled out, same final state.
+    sess2 = OnlineSession(cfg, init_state(cfg), init_runtime(cfg, s=3.0, T=15),
+                          buffer_capacity=64, chunk=16, seed=7)
+    for i in range(40):
+        sess2.offer(xs[i], int(ys[i]))
+    assert sess2.learn_available(40) == 40
+    np.testing.assert_array_equal(
+        np.asarray(sess.ss.tm.ta_state), np.asarray(sess2.ss.tm.ta_state)
+    )
+
+
 def test_online_adapt_rollback(tmp_path):
     """Fig-3 FSM for LMs: degraded eval loss triggers checkpoint rollback."""
     from repro.serve.online_adapt import OnlineAdaptConfig, OnlineAdaptManager
