@@ -139,6 +139,56 @@ def system_bench(n_orderings: int, n_cycles: int = 16, seed: int = 0) -> dict:
     }
 
 
+def analyze_fused_bench(n_orderings: int, grid: int = 9, seed: int = 0) -> dict:
+    """Fused single-contraction 3-set analysis vs three analyze_replicated
+    calls (the per-cycle analysis block of the system path); bitwise
+    equality asserted."""
+    from functools import partial
+
+    from repro.core import accuracy as acc_mod
+    from repro.eval.crossval import grid_layout, replicate_state
+
+    sets, O = common.build_sets(n_orderings)
+    R = grid * O
+    s_rep, T_rep = grid_layout(
+        jnp.linspace(1.375, 3.0, grid), (15,), O
+    )
+    rt = init_runtime(CFG)._replace(s=s_rep, T=T_rep)
+    states = replicate_state(CFG, R)
+    triple = [
+        (sets.offline_x, sets.offline_y, sets.offline_valid),
+        (sets.validation_x, sets.validation_y, sets.validation_valid),
+        (sets.online_x, sets.online_y, sets.online_valid),
+    ]
+
+    @partial(jax.jit, static_argnums=0)
+    def fused(cfg, st, r):
+        return acc_mod.analyze_sets_replicated(cfg, st, r, triple)
+
+    @partial(jax.jit, static_argnums=0)
+    def separate(cfg, st, r):
+        return jnp.stack(
+            [acc_mod.analyze_replicated(cfg, st, r, x, y, v)
+             for x, y, v in triple],
+            axis=-1,
+        )
+
+    t_fused, out_fused = _min_time(lambda: fused(CFG, states, rt), trials=5)
+    t_sep, out_sep = _min_time(lambda: separate(CFG, states, rt), trials=5)
+    if not np.array_equal(np.asarray(out_fused), np.asarray(out_sep)):
+        raise AssertionError(
+            "fused 3-set analysis diverges from three separate calls"
+        )
+    return {
+        "replicas": R,
+        "orderings": O,
+        "wall_s_fused": t_fused,
+        "wall_s_separate": t_sep,
+        "speedup": t_sep / t_fused,
+        "bitwise_identical": True,
+    }
+
+
 def main(n_orderings: int = 24):
     RESULTS.clear()
 
@@ -157,6 +207,15 @@ def main(n_orderings: int = 24):
         f"orderings={row['orderings']};"
         f"replicas_per_s={row['replicas_per_s']:.1f};"
         f"legacy_s={row['wall_s_legacy_vmap']:.3f};"
+        f"speedup={row['speedup']:.2f}x;bitwise_identical=1",
+        **row,
+    )
+
+    row = analyze_fused_bench(n_orderings)
+    _emit(
+        "crossval_analyze_fused", row["wall_s_fused"] * 1e6,
+        f"replicas={row['replicas']};"
+        f"separate_s={row['wall_s_separate']:.4f};"
         f"speedup={row['speedup']:.2f}x;bitwise_identical=1",
         **row,
     )

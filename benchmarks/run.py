@@ -20,6 +20,7 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import crossval as crossval_bench
     from benchmarks import fig4_limited_data, fig567_class_intro, fig89_faults
+    from benchmarks import fleet as fleet_bench
     from benchmarks import throughput
 
     for name, fn in [
@@ -28,6 +29,7 @@ def main() -> None:
         ("fig89", lambda: fig89_faults.main(n_ord)),
         ("throughput", throughput.main),
         ("crossval", lambda: crossval_bench.main(n_ord)),
+        ("fleet", fleet_bench.main),
     ]:
         try:
             fn()

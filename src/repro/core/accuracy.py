@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from repro.core import tm as tm_mod
 from repro.core.tm import TMConfig, TMRuntime, TMState
-from repro.kernels import dispatch
 
 
 def analyze(
@@ -57,23 +56,54 @@ def analyze_replicated(
     bit-for-bit (violation counts are integer-exact in f32; the per-replica
     mean reduces over the same m values in the same order).
     """
-    R = state.ta_state.shape[0]
-    D = xs.shape[0]
-    H = R // D
-    lits = tm_mod.make_literals(xs)                    # [D, m, 2f]
-    include = tm_mod.ta_actions(cfg, state, rt)        # [R, C, J, L]
-    clauses = dispatch.resolve(cfg.backend).clause_eval_batch_replicated(
-        include, lits, training=False
-    )                                                  # [R, m, C, J]
-    clauses = clauses & rt.clause_mask
-    votes = tm_mod.class_sums(cfg, clauses)            # [R, m, C]
-    votes = jnp.where(rt.class_mask, votes, jnp.iinfo(jnp.int32).min)
-    preds = jnp.argmax(votes, axis=-1)                 # [R, m]
+    preds = tm_mod.predict_batch_replicated_(cfg, state, rt, xs)  # [R, m]
+    return _reduce_replicated(preds, ys, valid)
+
+
+def _reduce_replicated(
+    preds: jax.Array,   # [R, m] int32
+    ys: jax.Array,      # [D, m] int32 (D | R)
+    valid: jax.Array | None,  # [D, m] bool
+) -> jax.Array:
+    """The accuracy reduction of :func:`analyze_replicated`. [R] f32."""
+    H = preds.shape[0] // ys.shape[0]
     ok = (preds == jnp.tile(ys, (H, 1))).astype(jnp.float32)
     if valid is None:
         return jnp.mean(ok, axis=-1)
     v = jnp.tile(valid, (H, 1)).astype(jnp.float32)
     return jnp.sum(ok * v, axis=-1) / jnp.maximum(jnp.sum(v, axis=-1), 1.0)
+
+
+def analyze_sets_replicated(
+    cfg: TMConfig,
+    state: TMState,     # leaves [R, ...]
+    rt: TMRuntime,      # masks shared; s/T scalar or [R]
+    sets: "list[tuple[jax.Array, jax.Array, jax.Array | None]]",
+    # each set: (xs [D, m_i, f], ys [D, m_i], valid [D, m_i] | None) — all
+    # sets must share the data-stream count D (D | R)
+) -> jax.Array:
+    """Per-replica accuracy over MANY sets in ONE contraction. [R, n_sets].
+
+    The Fig-3 manager analyzes three sets (offline / validation / online)
+    per cycle; calling :func:`analyze_replicated` thrice launches three
+    clause contractions that each re-stream the include bank. Here the sets
+    are concatenated along the batch axis so the whole analysis block is a
+    single ``clause_eval_batch_replicated`` launch — the include bank is
+    read once per *cycle*, not once per set.
+
+    Bitwise-identical to stacking the three separate calls: each batch
+    row's violation counts are independent integer dot products (exact in
+    the kernels' f32/int32 accumulation), and each set's mean reduces over
+    the same m_i values in the same order as :func:`analyze_replicated`.
+    """
+    xs = jnp.concatenate([s[0] for s in sets], axis=1)  # [D, sum(m_i), f]
+    preds = tm_mod.predict_batch_replicated_(cfg, state, rt, xs)
+    out, off = [], 0
+    for x, y, valid in sets:
+        m = x.shape[1]
+        out.append(_reduce_replicated(preds[:, off:off + m], y, valid))
+        off += m
+    return jnp.stack(out, axis=-1)                     # [R, n_sets]
 
 
 class History(NamedTuple):

@@ -273,3 +273,35 @@ def predict_batch(
     rather than a vmap of per-sample :func:`predict` planes.
     """
     return predict_batch_(cfg, state, rt, xs)
+
+
+def predict_batch_replicated_(
+    cfg: TMConfig,
+    state: TMState,     # leaves [R, ...]
+    rt: TMRuntime,      # masks shared; s/T scalar or [R]
+    xs: jax.Array,      # [D, B, f] bool — replica r predicts batch r % D
+) -> jax.Array:
+    """Unjitted replica-first prediction [R, B] (composable inside jits).
+
+    The fleet serving path: R independent machines run batched inference in
+    ONE dispatched ``clause_eval_batch_replicated`` contraction. Replica
+    ``r`` reproduces :func:`predict_batch_` on batch ``r % D`` bit-for-bit
+    (the kernel contract's stacking guarantee; argmax sees identical votes).
+    """
+    lits = make_literals(xs)                            # [D, B, 2f]
+    include = ta_actions(cfg, state, rt)                # [R, C, J, L]
+    clauses = dispatch.resolve(cfg.backend).clause_eval_batch_replicated(
+        include, lits, training=False
+    )                                                   # [R, B, C, J]
+    clauses = clauses & rt.clause_mask
+    votes = class_sums(cfg, clauses)                    # [R, B, C]
+    votes = jnp.where(rt.class_mask, votes, jnp.iinfo(jnp.int32).min)
+    return jnp.argmax(votes, axis=-1)                   # [R, B]
+
+
+@partial(jax.jit, static_argnums=0)
+def predict_batch_replicated(
+    cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array
+) -> jax.Array:
+    """Jitted :func:`predict_batch_replicated_` — the fleet ``infer`` entry."""
+    return predict_batch_replicated_(cfg, state, rt, xs)

@@ -137,16 +137,31 @@ def batch_shardings(batch_struct, mesh: Mesh, policy: ShardingPolicy):
     )
 
 
-def replica_shardings(tree, mesh: Mesh, *, axes: tuple[str, ...] = ("data",)):
+def replica_shardings(
+    tree,
+    mesh: Mesh,
+    *,
+    axes: tuple[str, ...] = ("data",),
+    n_replicas: Optional[int] = None,
+):
     """Shard each leaf's LEADING replica axis over the given mesh axes.
 
     The cross-validation / hyperparameter-sweep engine (repro.eval.crossval)
-    runs R independent TMs as one program; every replica is data-parallel by
-    construction, so the only sharding decision is the replica axis itself.
-    Leaves whose leading dim does not divide the mesh group fall back to
-    replication (the same never-crash rule as :func:`spec_partition`) —
-    sweep inputs mix full-R leaves (TA banks, per-replica s/T) with
-    data-stream leaves of leading D | R, and each gets the best legal spec.
+    and the online serving fleet (repro.serve.fleet) run R independent TMs
+    as one program; every replica is data-parallel by construction, so the
+    only sharding decision is the replica axis itself. Leaves whose leading
+    dim does not divide the mesh group fall back to replication (the same
+    never-crash rule as :func:`spec_partition`).
+
+    ``n_replicas`` pins the layout rule for mixed trees: sweep inputs mix
+    full-R leaves (TA banks, per-replica s/T) with per-data-stream leaves
+    of leading ``D | R`` (ordering datapoints, RNG keys). When given, ONLY
+    leaves whose leading dim equals ``n_replicas`` shard — the grid-major
+    replica axis goes device-local in contiguous slabs while every data
+    stream is replicated onto all devices, so the kernels' ``r % D`` gather
+    never crosses a device boundary. Without it (legacy behaviour) any
+    divisible leading dim shards, which scatters the D streams away from
+    the replicas that read them.
     """
     present = _mesh_axes_present(mesh, axes)
     group = int(np.prod([mesh.shape[a] for a in present])) if present else 1
@@ -154,7 +169,12 @@ def replica_shardings(tree, mesh: Mesh, *, axes: tuple[str, ...] = ("data",)):
 
     def one(x):
         shape = getattr(x, "shape", ())
-        if present and len(shape) >= 1 and shape[0] % group == 0:
+        if (
+            present
+            and len(shape) >= 1
+            and shape[0] % group == 0
+            and (n_replicas is None or shape[0] == n_replicas)
+        ):
             return NamedSharding(mesh, PS(spec_axes))
         return NamedSharding(mesh, PS())
 

@@ -118,16 +118,14 @@ def _sweep_device(
 
 
 def _analyze_all_replicated(cfg, state, ctl: mgr.CycleCtl) -> jax.Array:
+    # ONE clause contraction for the whole three-set analysis block (the
+    # ROADMAP system-path item): the include bank streams once per cycle.
     s = ctl.sets
-    return jnp.stack([
-        acc_mod.analyze_replicated(
-            cfg, state, ctl.rt, s.offline_x, s.offline_y, s.offline_valid),
-        acc_mod.analyze_replicated(
-            cfg, state, ctl.rt, s.validation_x, s.validation_y,
-            s.validation_valid),
-        acc_mod.analyze_replicated(
-            cfg, state, ctl.rt, s.online_x, s.online_y, s.online_valid),
-    ], axis=-1)                                        # [O, 3]
+    return acc_mod.analyze_sets_replicated(cfg, state, ctl.rt, [
+        (s.offline_x, s.offline_y, s.offline_valid),
+        (s.validation_x, s.validation_y, s.validation_valid),
+        (s.online_x, s.online_y, s.online_valid),
+    ])                                                 # [O, 3]
 
 
 @partial(jax.jit, static_argnums=(0, 1, 5))
@@ -197,10 +195,15 @@ class CrossValRun:
     cfg: TMConfig
     mesh: Optional[Mesh] = None
 
-    def _put(self, tree):
+    def _put(self, tree, n_replicas: Optional[int] = None):
         if self.mesh is None:
             return tree
-        sh = shard_mod.replica_shardings(tree, self.mesh)
+        # Shard only the full-R (grid-major) axis; per-data-stream leaves
+        # (leading D < R) replicate so every replica's r % D gather stays
+        # device-local (no cross-device collectives inside the sweep).
+        sh = shard_mod.replica_shardings(
+            tree, self.mesh, n_replicas=n_replicas
+        )
         return jax.tree.map(jax.device_put, tree, sh)
 
     def sweep(
@@ -229,7 +232,9 @@ class CrossValRun:
             None if offline_valid is None else jnp.asarray(offline_valid, bool),
         )
         val = (jnp.asarray(val_x, bool), jnp.asarray(val_y, jnp.int32))
-        s_rep, T_rep, off, val, keys = self._put((s_rep, T_rep, off, val, keys))
+        s_rep, T_rep, off, val, keys = self._put(
+            (s_rep, T_rep, off, val, keys), n_replicas=R
+        )
 
         t0 = time.perf_counter()
         acc = _sweep_device(self.cfg, s_rep, T_rep, off, val, n_epochs, keys)
@@ -262,7 +267,7 @@ class CrossValRun:
         same accuracies/activity bit-for-bit, one fused plane per datapoint.
         """
         O = keys.shape[0]
-        states, sets, keys = self._put((states, sets, keys))
+        states, sets, keys = self._put((states, sets, keys), n_replicas=O)
         t0 = time.perf_counter()
         state, accs, activity = _system_device(
             self.cfg, sys_cfg, states, rt, sets, schedule, keys

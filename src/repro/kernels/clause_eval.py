@@ -39,6 +39,14 @@ def _kernel(inc_ref, rhs_ref, out_ref):
     )
 
 
+def _kernel_replicated(inc_ref, rhs_ref, out_ref):
+    # Leading length-1 replica block: inc [1, BLK_CJ, Lp], rhs [1, Lp, LANES]
+    # -> out [1, BLK_CJ, LANES] i32 (shared by both replicated launches).
+    out_ref[...] = jnp.dot(
+        inc_ref[0], rhs_ref[0], preferred_element_type=jnp.int32
+    )[None]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def clause_counts(
     include: jax.Array,   # [CJ, L] int8/bool — flattened (class, clause) rows
@@ -182,13 +190,8 @@ def clause_counts_replicated(
     rhs = rhs.at[:, :L, 0].set(1 - literals.astype(jnp.int8))
     rhs = rhs.at[:, :L, 1].set(1)
 
-    def _kernel3(inc_ref, rhs_ref, out_ref):
-        out_ref[...] = jnp.dot(
-            inc_ref[0], rhs_ref[0], preferred_element_type=jnp.int32
-        )[None]
-
     out = pl.pallas_call(
-        _kernel3,
+        _kernel_replicated,
         grid=(R, cjp // BLK_CJ),
         in_specs=[
             pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r, i, 0)),
@@ -219,6 +222,57 @@ def clause_eval_replicated(
     return out.reshape(R, C, J)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_counts_batch_replicated(
+    include: jax.Array,   # [R, CJ, L] int8/bool — per-replica include banks
+    literals: jax.Array,  # [D, B, L] bool — replica r reads batch r % D
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(violations [R, CJ, B] i32, n_included [R, CJ] i32) in ONE launch.
+
+    The replica-first form of :func:`clause_counts_batch`: a 3-D grid over
+    (replica, clause-block, column-block), each replica contracting its own
+    include bank against its data stream's [L, B+1] rhs. The rhs BlockSpec
+    maps replica ``r`` to stream ``r % D`` — the factored layout rule — so
+    a hyperparameter grid sharing one ordering's batch stores the rhs once
+    per ordering instead of gathering an R/D-fold tiled copy (the
+    take+vmap formulation this replaced). This is the kernel under both the
+    fused multi-set analysis pass (``accuracy.analyze_sets_replicated``)
+    and the fleet serving ``infer`` path (``tm.predict_batch_replicated``).
+    """
+    R, cj, L = include.shape
+    D, B, _ = literals.shape
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Lp = -(-L // LANES) * LANES
+    cols = B + 1
+    colsp = -(-cols // LANES) * LANES
+
+    inc = jnp.zeros((R, cjp, Lp), dtype=jnp.int8).at[:, :cj, :L].set(
+        include.astype(jnp.int8)
+    )
+    rhs = jnp.zeros((D, Lp, colsp), dtype=jnp.int8)
+    rhs = rhs.at[:, :L, :B].set(
+        jnp.swapaxes(1 - literals.astype(jnp.int8), 1, 2)
+    )
+    rhs = rhs.at[:, :L, B].set(1)
+
+    out = pl.pallas_call(
+        _kernel_replicated,
+        grid=(R, cjp // BLK_CJ, colsp // LANES),
+        in_specs=[
+            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i, j: (r, i, 0)),
+            pl.BlockSpec((1, Lp, LANES), lambda r, i, j: (r % D, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i, j: (r, i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, cjp, colsp), jnp.int32),
+        interpret=interpret,
+    )(inc, rhs)
+    return out[:, :cj, :B], out[:, :cj, B]
+
+
 def clause_eval_batch_replicated(
     include: jax.Array,   # [R, C, J, L] bool (post-fault TA actions)
     literals: jax.Array,  # [D, B, L] bool — replica r reads batch r % D
@@ -228,18 +282,18 @@ def clause_eval_batch_replicated(
 ) -> jax.Array:
     """Kernel-backed replica-first batch clause outputs [R, B, C, J] bool.
 
-    vmap of :func:`clause_eval_batch` over replicas (pallas_call's batching
-    rule folds the replica axis into the kernel grid); the literal batches
-    are gathered per replica — the analysis pass runs once per sweep, so the
-    R/D-fold rhs tiling is irrelevant next to the per-step training planes.
+    One launch of :func:`clause_counts_batch_replicated` — the whole
+    analysis / serving-inference plane of R machines rides a single 3-D
+    kernel grid with the ``r % D`` rhs index map doing the data-stream
+    factoring (previously a per-replica gather + vmap of
+    :func:`clause_eval_batch`). Bit-identical to stacking
+    ``clause_eval_batch(include[r], literals[r % D])`` per replica.
     """
-    R = include.shape[0]
-    D = literals.shape[0]
-    if R % D:
-        raise ValueError(f"data replicas {D} must divide replicas {R}")
-    lits = jnp.take(literals, jnp.arange(R) % D, axis=0)  # [R, B, L]
-    return jax.vmap(
-        lambda inc, lit: clause_eval_batch(
-            inc, lit, training=training, interpret=interpret
-        )
-    )(include, lits)
+    R, C, J, L = include.shape
+    B = literals.shape[1]
+    viol, n_inc = clause_counts_batch_replicated(
+        include.reshape(R, C * J, L), literals, interpret=interpret
+    )
+    fired = jnp.swapaxes(viol == 0, 1, 2).reshape(R, B, C, J)
+    empty = (n_inc == 0).reshape(R, 1, C, J)
+    return jnp.where(empty, jnp.bool_(training), fired)

@@ -35,8 +35,10 @@ class KernelBackend(NamedTuple):
     All entries are pure, trace-compatible functions. Two orthogonal axes
     run through the contract: *batch-first* entries stream many datapoints
     through ONE machine, *replica-first* entries stream one datapoint each
-    through MANY independent machines (the cross-validation / hyperparameter
-    sweep axis — paper §3.6.1/§5, DESIGN.md §9). Replica-first operands
+    through MANY independent machines — the cross-validation /
+    hyperparameter sweep axis (paper §3.6.1/§5, DESIGN.md §9) and, since
+    the serving layer became the contract's third consumer, the online
+    fleet axis (K concurrent Fig-3 sessions, DESIGN.md §10). Replica-first operands
     follow one layout rule: per-replica state/control carries a leading
     ``R``; per-data-stream operands (literals, uniforms) carry a leading
     ``D`` with ``D | R``, and replica ``r`` reads data row ``r % D`` — so a
@@ -51,8 +53,11 @@ class KernelBackend(NamedTuple):
       training) -> [R,C,J]`` — replica-first clause plane; MUST equal
       stacking ``clause_eval(include[r], literals[r % D])`` bit-for-bit.
     * ``clause_eval_batch_replicated(include [R,C,J,L], literals [D,B,L], *,
-      training) -> [R,B,C,J]`` — replica-first analysis pass; MUST equal
-      stacking ``clause_eval_batch`` per replica bit-for-bit.
+      training) -> [R,B,C,J]`` — replica-first analysis/serving pass (the
+      sweep's fused multi-set analysis AND the fleet ``infer`` path run on
+      this entry; pallas: one 3-D (replica, clause-block, column-block)
+      grid with ``r % D`` rhs index maps); MUST equal stacking
+      ``clause_eval_batch`` per replica bit-for-bit.
     * ``feedback_step(ta_state [C,J,L], literals [L], clause_out [C,J],
       type1_sel [C,J], type2_sel [C,J], u [C,J,L], *, s, n_states, s_policy,
       boost_true_positive) -> new ta_state`` — one datapoint's TA update.

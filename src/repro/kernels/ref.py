@@ -95,8 +95,10 @@ def clause_eval_batch_replicated(
     [R, B, C, J].
 
     One batched GEMM over all replicas (replica ``r`` reads literal batch
-    ``r % D``); the accuracy-analysis pass of the whole cross-validation sweep
-    is a single contraction. Violation counts are integers << 2^24, so f32
+    ``r % D``): the whole cross-validation sweep's accuracy analysis — all
+    three per-cycle sets concatenated (``accuracy.analyze_sets_replicated``)
+    — and the serving fleet's batched ``infer`` path are each a single
+    contraction on this entry. Violation counts are integers << 2^24, so f32
     accumulation is exact and the result is bit-identical to stacking
     :func:`clause_eval_batch` per replica.
     """

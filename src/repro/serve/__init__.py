@@ -1,1 +1,3 @@
-"""Serving: batched prefill+decode engine, online-adaptation manager."""
+"""Serving: batched prefill+decode engine, online-adaptation managers, and
+the replica-parallel online fleet (DESIGN.md §10)."""
+from repro.serve.fleet import OnlineFleet  # noqa: F401

@@ -12,11 +12,15 @@ back to the last known-good state):
   served numbers are produced by exactly the code the benchmarks measure.
 * :class:`OnlineAdaptManager` — the same FSM generalized to LM serving for
   any arch in `repro.configs` (DESIGN.md §4: what transfers).
+* :class:`TMFleetAdaptManager` — the FSM lifted to a whole serving fleet
+  (:class:`repro.serve.fleet.OnlineFleet`): K machines share every device
+  dispatch while cadence counters, best-state snapshots and §5.3.2
+  rollbacks run per replica (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -116,6 +120,139 @@ class TMOnlineAdaptManager:
         elif self._best is None or acc > self._best:
             self._best, self._best_state = acc, self.session.ss.tm
         return acc
+
+
+class TMFleetAdaptManager:
+    """Fig-3 FSM for a whole serving fleet, with per-replica threshold state.
+
+    The fleet generalisation of :class:`TMOnlineAdaptManager`: K machines
+    (one :class:`~repro.serve.fleet.OnlineFleet`) share every device
+    dispatch — offers, drains, analyses — while the §5.3.2 mitigation
+    policy runs per replica: each member carries its own analysis-cadence
+    counter, its own best-known accuracy/TA-bank snapshot, and rolls back
+    independently when ITS accuracy collapses. Per-replica runtime
+    thresholds are first-class: pass ``rt`` with ``s``/``T`` as ``[K]``
+    vectors and every member serves and learns under its own (s, T) — the
+    replicated kernels' per-replica hyperparameter ports (DESIGN.md §9).
+
+    The analysis pass is ONE ``analyze_replicated`` contraction over the
+    shared eval set (stored once: D = 1 data stream factored across the
+    fleet) regardless of how many members hit their cadence that step.
+    """
+
+    def __init__(self, cfg: TMConfig, state: TMState, rt: TMRuntime,
+                 eval_x, eval_y, *, n_replicas: int,
+                 oc: Optional[TMOnlineAdaptConfig] = None,
+                 seed: Union[int, Sequence[int]] = 0, mesh=None):
+        from repro.serve.fleet import OnlineFleet
+
+        self.cfg, self.rt = cfg, rt
+        self.oc = oc or TMOnlineAdaptConfig()
+        self.eval_x = jnp.asarray(eval_x, dtype=bool)
+        self.eval_y = jnp.asarray(eval_y, dtype=jnp.int32)
+        self.fleet = OnlineFleet(
+            cfg, state, rt, n_replicas=n_replicas,
+            buffer_capacity=self.oc.buffer_capacity,
+            chunk=self.oc.chunk, seed=seed, mesh=mesh,
+        )
+        K = self.fleet.n_replicas
+        self.history: list = []            # (steps [K], accuracies [K])
+        self.rollbacks = np.zeros(K, dtype=np.int64)
+        self.lost = np.zeros(K, dtype=np.int64)
+        self._since = np.zeros(K, dtype=np.int64)
+        self._best = np.full(K, np.nan)    # nan = no known-good snapshot yet
+        self._best_state: TMState = self.fleet.ss.tm
+
+    def serve(self, xs) -> np.ndarray:
+        """Fleet predictions [K, B] for live traffic (the shipped numbers)."""
+        return self.fleet.infer(xs)
+
+    def analyze(self) -> np.ndarray:
+        """Eval accuracy of every member in ONE contraction. [K] f32."""
+        acc = np.asarray(acc_mod.analyze_replicated(
+            self.cfg, self.fleet.ss.tm, self.rt,
+            self.eval_x[None], self.eval_y[None],   # D = 1: stored once
+        ))
+        self.history.append((self.fleet.steps, acc))
+        return acc
+
+    def offline_train(self, xs, ys, n_epochs: int = 10,
+                      seed: int = 1) -> np.ndarray:
+        """Offline phase for the whole fleet (one replicated epochs scan)."""
+        from repro.core import feedback as fb_mod
+
+        st = fb_mod.train_epochs_replicated(
+            self.cfg, self.fleet.ss.tm, self.rt,
+            jnp.asarray(xs, dtype=bool)[None],
+            jnp.asarray(ys, dtype=jnp.int32)[None],
+            jax.random.PRNGKey(seed)[None], n_epochs,
+        )
+        self.fleet.ss = self.fleet.ss._replace(tm=st)
+        acc = self.analyze()
+        self._best = acc.copy()
+        self._best_state = st
+        return acc
+
+    def _select_rows(self, mask: np.ndarray, new: TMState,
+                     old: TMState) -> TMState:
+        gate = online_mod.replica_gate(jnp.asarray(mask))
+        return jax.tree.map(gate, new, old)
+
+    def observe_rows(self, xs, ys, mask=None) -> Optional[np.ndarray]:
+        """One labelled datapoint per (masked) replica; returns [K] eval
+        accuracies when at least one member hits its analysis cadence,
+        None otherwise.
+
+        The drain-retry backpressure policy of the single-machine manager,
+        fleet-wide: every drain is one replicated dispatch for all members,
+        and drained points advance each member's OWN cadence counter.
+        """
+        K = self.fleet.n_replicas
+        mask = (
+            np.ones(K, dtype=bool) if mask is None
+            else np.asarray(mask, dtype=bool)
+        )
+        chunk = self.fleet.chunk  # fleet clamps to [1, buffer_capacity],
+        # exactly like the single-machine manager's session.chunk budget
+        accepted = self.fleet.offer_rows(xs, ys, mask)
+        retry = mask & ~accepted
+        if retry.any():
+            # Backpressure: drain a chunk fleet-wide, then retry once.
+            self._since += self.fleet.drain(chunk)
+            accepted = self.fleet.offer_rows(xs, ys, retry)
+            self.lost += retry & ~accepted
+        self._since += self.fleet.drain(chunk)
+
+        due = self._since >= self.oc.analyze_every
+        if not due.any():
+            return None
+        self._since[due] = 0
+        acc = self.analyze()
+        have_best = ~np.isnan(self._best)
+        collapse = due & have_best & (
+            acc < self._best - self.oc.rollback_threshold
+        )
+        improve = due & (~have_best | (acc > self._best))
+        if collapse.any():
+            # §5.3.2 per replica: restore collapsed members' known-good
+            # TA banks; healthy members keep serving untouched.
+            self.fleet.ss = self.fleet.ss._replace(
+                tm=self._select_rows(collapse, self._best_state,
+                                     self.fleet.ss.tm)
+            )
+            self.rollbacks += collapse
+        if improve.any():
+            self._best = np.where(improve, acc, self._best)
+            self._best_state = self._select_rows(
+                improve, self.fleet.ss.tm, self._best_state
+            )
+        return acc
+
+    def observe(self, r: int, x, y) -> Optional[np.ndarray]:
+        """One labelled datapoint into replica ``r`` only."""
+        mask = np.zeros(self.fleet.n_replicas, dtype=bool)
+        mask[r] = True
+        return self.observe_rows(x, y, mask)
 
 
 @dataclasses.dataclass

@@ -242,6 +242,45 @@ def test_system_engine_matches_run_system_loop(iris_osets):
         )
 
 
+def test_analyze_sets_replicated_matches_separate_calls(iris_osets):
+    """The fused single-contraction analysis pass == three separate
+    analyze_replicated calls, bit for bit, including a grid axis (H > 1)
+    and validity masks (the ROADMAP system-path fusion)."""
+    from repro.core import accuracy as acc_mod
+
+    O = iris_osets.offline_x.shape[0]
+    R = 2 * O  # grid-major: two (s, T) cells per ordering
+    s_rep, T_rep = grid_layout((1.375, 3.0), (15,), O)
+    rt = tm_mod.init_runtime(CFG)._replace(s=s_rep, T=T_rep)
+    # non-trivial banks: train the whole grid for one epoch
+    keys = jax.random.split(jax.random.PRNGKey(5), O)
+    state = fb_mod.train_epochs_replicated(
+        CFG, replicate_state(CFG, R), rt,
+        jnp.asarray(iris_osets.offline_x), jnp.asarray(iris_osets.offline_y),
+        keys, 1,
+    )
+
+    n_val = iris_osets.validation_x.shape[1]
+    val_valid = jnp.asarray(
+        np.arange(n_val)[None, :] < (n_val - np.arange(O))[:, None]
+    )
+    sets = [
+        (jnp.asarray(iris_osets.offline_x),
+         jnp.asarray(iris_osets.offline_y), None),
+        (jnp.asarray(iris_osets.validation_x),
+         jnp.asarray(iris_osets.validation_y), val_valid),
+        (jnp.asarray(iris_osets.online_x),
+         jnp.asarray(iris_osets.online_y), None),
+    ]
+    fused = acc_mod.analyze_sets_replicated(CFG, state, rt, sets)
+    want = jnp.stack([
+        acc_mod.analyze_replicated(CFG, state, rt, x, y, v)
+        for x, y, v in sets
+    ], axis=-1)
+    assert fused.shape == (R, 3)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(fused))
+
+
 @pytest.mark.slow
 def test_full_iris_sweep_bitwise_identical_to_one_cell_loop():
     """Acceptance: the paper's full 5-block sweep — ALL 120 orderings x a
