@@ -3,7 +3,10 @@
 Offline-train a Tsetlin Machine on 20 labelled datapoints, then keep
 learning online while the accuracy-analysis block tracks all three sets —
 the whole experiment (all cross-validation orderings) runs as ONE vmapped
-JAX program.
+JAX program. Then the same machine goes live behind ``TMService``, the
+fleet-native serving surface (a single machine is just K = 1): labelled
+traffic through the queue-based batch ingress, ``tick`` interleaving
+online training with periodic accuracy analysis.
 
     PYTHONPATH=src python examples/quickstart.py [--orderings 24]
 """
@@ -41,6 +44,30 @@ def main():
           f"validation {gains[1]:+.3f}  online {gains[2]:+.3f}")
     print(f"mean TA-update activity (clock-gating analogue): "
           f"{activity.mean():.4f}")
+
+    # -- the same machine as a live service (TMService, K = 1) --------------
+    from repro.core import init_state
+    from repro.data import iris
+    from repro.serve import AdaptPolicy, ServiceConfig, TMService
+
+    xs, ys = iris.load()
+    svc = TMService(
+        common.CFG, init_state(common.CFG),
+        ServiceConfig(replicas=1, buffer_capacity=32, chunk=8,
+                      s=1.0, T=15,
+                      policy=AdaptPolicy(analyze_every=16)),
+        eval_x=xs[100:], eval_y=ys[100:],
+    )
+    base = svc.offline_train(xs[:20], ys[:20], n_epochs=10)
+    print(f"\nTMService (K=1): offline eval accuracy {float(base[0]):.3f}")
+    for i in range(32):                      # labelled traffic -> batch ingress
+        svc.submit(0, xs[20 + i], int(ys[20 + i]))
+        report = svc.tick()                  # drain + cadence + analysis
+        if report.accuracy is not None:
+            print(f"  tick {i}: online-adapted eval accuracy "
+                  f"{float(report.accuracy[0]):.3f}")
+    print(f"  served predictions for a probe batch: "
+          f"{svc.serve(xs[:5])[0].tolist()}")
 
 
 if __name__ == "__main__":

@@ -49,12 +49,6 @@ class ChunkAux(NamedTuple):
     activity: jax.Array   # [K] f32   — per-step TA-update activity
 
 
-@partial(jax.jit, static_argnums=0)
-def _enqueue(cfg: TMConfig, ss: SessionState, x, y):
-    new_buf, ok = buf_mod.push(ss.buf, x, y)
-    return ss._replace(buf=new_buf), ok
-
-
 def replica_gate(valid: jax.Array):
     """Per-leaf where(valid, new, old) with valid [R] broadcast over leaves.
 
@@ -205,6 +199,12 @@ class OnlineSession:
     * ``learn_available``  — consumer side: drain up to ``max_points`` buffered
       datapoints through online training (the per-cycle budget of Fig. 3).
     * ``infer(xs)``        — batched inference at any time.
+
+    Since the TMService redesign this is a compatibility shim: the K = 1
+    slice of :class:`repro.serve.service.TMService` (which keeps the
+    specialized single-machine drain body on this slice), exposing the
+    historical scalar-shaped ``ss``/``step``/aux views. Pinned bitwise to
+    the pre-redesign implementation by tests/test_service.py.
     """
 
     def __init__(
@@ -217,25 +217,56 @@ class OnlineSession:
         chunk: int = 16,
         seed: int = 0,
     ):
-        self.cfg = cfg
-        self.rt = rt
-        self.chunk = max(1, min(chunk, buffer_capacity))
-        self._key = jax.random.PRNGKey(seed)
-        self.ss = SessionState(
-            tm=state,
-            buf=buf_mod.make(buffer_capacity, cfg.n_features),
-            step=jnp.int32(0),
-        )
-        self.dropped = 0  # producer-side backpressure events
+        from repro.serve.service import ServiceConfig, TMService
+
+        # seed as a 1-sequence: the service then consumes PRNGKey(seed)
+        # exactly like the pre-redesign session (no fold_in).
+        self._svc = TMService(cfg, state, ServiceConfig(
+            replicas=1, buffer_capacity=buffer_capacity, chunk=chunk,
+            seed=[int(seed)],
+        ), rt=rt)
+
+    @classmethod
+    def _from_service(cls, svc) -> "OnlineSession":
+        if svc.n_replicas != 1:
+            raise ValueError("OnlineSession shims a K = 1 service only")
+        sess = cls.__new__(cls)
+        sess._svc = svc
+        return sess
+
+    @property
+    def service(self):
+        """The fleet-native surface this shim fronts (K = 1)."""
+        return self._svc
+
+    @property
+    def cfg(self) -> TMConfig:
+        return self._svc.cfg
+
+    @property
+    def rt(self) -> TMRuntime:
+        return self._svc.rt
+
+    @property
+    def chunk(self) -> int:
+        return self._svc.chunk
+
+    @property
+    def ss(self) -> SessionState:
+        """The historical single-machine view: every leaf squeezed of its
+        leading K = 1 replica axis."""
+        return jax.tree.map(lambda a: a[0], self._svc.ss)
+
+    @ss.setter
+    def ss(self, value: SessionState):
+        self._svc.ss = jax.tree.map(lambda a: jnp.asarray(a)[None], value)
+
+    @property
+    def dropped(self) -> int:
+        return int(self._svc.dropped[0])  # backpressure events
 
     def offer(self, x, y) -> bool:
-        x = jnp.asarray(x, dtype=bool)
-        y = jnp.asarray(y, dtype=jnp.int32)
-        self.ss, ok = _enqueue(self.cfg, self.ss, x, y)
-        accepted = bool(ok)
-        if not accepted:
-            self.dropped += 1
-        return accepted
+        return self._svc.submit(0, x, y)
 
     def fill_from(self, source: DataSource, n: int) -> int:
         """Pull ``n`` rows from a data source into the buffer."""
@@ -259,31 +290,19 @@ class OnlineSession:
 
         ``on_chunk`` (optional) receives each chunk's :class:`ChunkAux` —
         the serving-side accuracy/activity observability of the paper's
-        Fig. 3 analysis block. Without a callback the monitoring pass is
-        compiled out entirely (``monitor=False``), so observability costs
-        nothing unless requested.
+        Fig. 3 analysis block, in the historical single-machine shapes
+        ([chunk], no replica axis). Without a callback the monitoring pass
+        is compiled out entirely (``monitor=False``), so observability
+        costs nothing unless requested.
         """
-        trained = 0
-        monitor = on_chunk is not None
-        while trained < max_points:
-            want = min(self.chunk, max_points - trained)
-            self._key, k = jax.random.split(self._key)
-            self.ss, n, aux = _consume_many(
-                self.cfg, self.chunk, self.ss, self.rt, jnp.int32(want), k,
-                monitor=monitor,
-            )
-            n = int(n)
-            trained += n
-            if monitor and n:
-                on_chunk(aux)
-            if n < want:  # buffer drained before the budget ran out
-                break
-        return trained
+        cb = None if on_chunk is None else (
+            lambda aux: on_chunk(jax.tree.map(lambda a: a[0], aux))
+        )
+        return int(self._svc.drain(max_points, on_chunk=cb)[0])
 
     def infer(self, xs) -> np.ndarray:
-        xs = jnp.asarray(xs, dtype=bool)
-        return np.asarray(tm_mod.predict_batch(self.cfg, self.ss.tm, self.rt, xs))
+        return self._svc.serve(xs)[0]
 
     @property
     def buffered(self) -> int:
-        return int(self.ss.buf.size)
+        return int(self._svc.buffered[0])

@@ -1,3 +1,46 @@
-"""Serving: batched prefill+decode engine, online-adaptation managers, and
-the replica-parallel online fleet (DESIGN.md §10)."""
+"""Serving: the fleet-native ``TMService`` surface (queue-based batch
+ingress, replica-parallel drain, §5.3.2 adapt policy), its compatibility
+shims (``OnlineSession`` lives in ``repro.core.online``; ``OnlineFleet``
+and the adapt managers here), and the batched LM prefill+decode engine
+(DESIGN.md §10-§11)."""
 from repro.serve.fleet import OnlineFleet  # noqa: F401
+from repro.serve.online_adapt import (  # noqa: F401
+    OnlineAdaptConfig,
+    OnlineAdaptManager,
+    TMFleetAdaptManager,
+    TMOnlineAdaptConfig,
+    TMOnlineAdaptManager,
+)
+from repro.serve.router import BatchRouter  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    AdaptPolicy,
+    ServiceConfig,
+    TickReport,
+    TMService,
+)
+
+__all__ = [
+    "AdaptPolicy",
+    "BatchRouter",
+    "Engine",
+    "EngineConfig",
+    "OnlineAdaptConfig",
+    "OnlineAdaptManager",
+    "OnlineFleet",
+    "ServiceConfig",
+    "TickReport",
+    "TMFleetAdaptManager",
+    "TMOnlineAdaptConfig",
+    "TMOnlineAdaptManager",
+    "TMService",
+]
+
+
+def __getattr__(name):
+    # The LM serving engine pulls the whole transformer/models stack;
+    # loaded lazily so the TM-only serving surface stays light to import.
+    if name in ("Engine", "EngineConfig"):
+        from repro.serve import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

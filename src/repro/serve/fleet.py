@@ -1,86 +1,42 @@
-"""OnlineFleet: replica-parallel online serving (paper §3.5 + §4 at fleet scale).
+"""OnlineFleet: compatibility shim over :class:`~repro.serve.service.TMService`.
 
-MATADOR (arXiv 2403.10538) and the runtime-tunable eFPGA TM (arXiv
-2502.07823) both run many concurrent TM instances on one accelerator; the
-ROADMAP names "replica-parallel online serving" as the path from
-``OnlineSession`` (one machine drained at a time) to serving heavy traffic.
-:class:`OnlineFleet` is that path: K concurrent online sessions — K distinct
-TA banks, K cyclic buffers, K RNG streams, K Fig-3 step counters — whose
-buffered datapoints drain through ``feedback_step_replicated`` in ONE jitted
-call per chunk, the same R-leading layout ``CrossValRun`` uses for
-cross-validation orderings, now carrying live interleaved train/infer
-traffic. The serving layer is the third consumer of the replicated kernel
-contract, after the CV engine and hpsearch.
+The replica-parallel online serving surface (paper §3.5 + §4 at fleet
+scale) now lives in ONE place — ``serve/service.py`` — and ``OnlineFleet``
+is its pre-redesign face: ``offer``/``offer_rows`` map to the router-staged
+``submit``/``submit_rows`` ingress (so the old one-dispatch-per-point
+``offer`` cost is gone: acceptance is decided against the host-side
+occupancy mirror and the device sees packed ``[K, B_ingress]`` blocks),
+``drain`` and ``infer`` map to ``TMService.drain``/``serve``. Observable
+behavior is pinned bitwise to the pre-redesign fleet by
+tests/test_service.py (oracles transcribed from the old implementation)
+and tests/test_fleet.py.
 
-Layout rule (kernels/dispatch.py): every fleet member owns its data stream,
-so D = R = K — state, buffers, budgets and keys all lead with K. Per-replica
-hyperparameters ride the runtime's ``s``/``T`` ports as ``[K]`` vectors
-(the replicated kernels broadcast scalars, so a homogeneous fleet costs
-nothing).
-
-Bit-exactness contract: replica ``r`` of a fleet reproduces a standalone
-:class:`~repro.core.online.OnlineSession` given the same RNG key and offer
-stream, bit for bit — drained TA banks, monitoring aux and inference alike
-(asserted for K ∈ {1, 3, 8} on both backends in tests/test_fleet.py).
+Layout rule, bit-exactness contract and per-replica ``[K]`` s/T ports are
+documented on :class:`TMService` (DESIGN.md §10-§11).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional, Sequence, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import online as online_mod
-from repro.core import tm as tm_mod
 from repro.core.online import ChunkAux, SessionState
 from repro.core.tm import TMConfig, TMRuntime, TMState
-from repro.data import buffer as buf_mod
-from repro.distributed import sharding as shard_mod
-
-
-@jax.jit
-def _advance_keys(keys, active):
-    """Split every ACTIVE replica's RNG key; retired replicas keep theirs.
-
-    Returns (new persistent keys [K], chunk keys [K]). One jitted dispatch
-    per chunk — a replica's key splits exactly once per chunk it
-    participates in, matching a standalone session's per-chunk split (the
-    chunk keys handed to retired replicas are unused: their row budget for
-    the chunk is 0, so no state is touched).
-    """
-    k2 = jax.vmap(jax.random.split)(keys)               # [K, 2, key]
-    return jnp.where(active[:, None], k2[:, 0], keys), k2[:, 1]
-
-
-@partial(jax.jit, static_argnums=0)
-def _enqueue_rows(cfg: TMConfig, ss: SessionState, xs, ys, mask):
-    """Push one datapoint into each masked replica's ring buffer.
-
-    xs [K, f] bool, ys [K] i32, mask [K] bool — ONE jitted dispatch offers a
-    row to every selected fleet member (the fleet ingress path).
-    Returns (new state, accepted [K] bool).
-    """
-    def push_one(buf_r, x, y, m):
-        new_buf, ok = buf_mod.push(buf_r, x, y)
-        buf = jax.tree.map(lambda a, b: jnp.where(m, a, b), new_buf, buf_r)
-        return buf, ok & m
-
-    bufs, oks = jax.vmap(push_one)(ss.buf, xs, ys, mask)
-    return ss._replace(buf=bufs), oks
+from repro.serve.service import ServiceConfig, TMService
 
 
 class OnlineFleet:
     """K concurrent online-learning sessions drained as ONE replicated plane.
 
-    * ``offer(r, x, y)`` / ``offer_rows(xs, ys)`` — producer side: push into
-      replica r's cyclic buffer (rows into every replica's buffer at once).
+    * ``offer(r, x, y)`` / ``offer_rows(xs, ys)`` — producer side: stage
+      into replica r's stream (rows into every replica's stream at once);
+      the batch router lands staged rows in packed blocks, one jitted
+      dispatch per flush.
     * ``drain(max_points)`` — consumer side: all replicas consume up to
-      their per-replica budget through online training, chunk by chunk, one
-      jitted ``_consume_many_replicated`` call per chunk (the per-cycle
-      budget of Fig. 3, K machines per dispatch instead of one).
+      their per-replica budget through online training, chunk by chunk,
+      one jitted call per chunk (the per-cycle budget of Fig. 3, K
+      machines per dispatch instead of one).
     * ``infer(xs)`` — fleet inference: one replica-first batched clause
       contraction serves every member's batch.
 
@@ -105,83 +61,69 @@ class OnlineFleet:
         seed: Union[int, Sequence[int]] = 0,
         mesh: Optional[Mesh] = None,
     ):
-        replicated = state.ta_state.ndim == 4
         if n_replicas is None:
-            if not replicated:
+            if state.ta_state.ndim != 4:
                 raise ValueError(
                     "n_replicas is required when state is unreplicated"
                 )
             n_replicas = state.ta_state.shape[0]
-        if replicated and state.ta_state.shape[0] != n_replicas:
-            raise ValueError(
-                f"state carries {state.ta_state.shape[0]} replicas, "
-                f"expected {n_replicas}"
-            )
-        if not replicated:
-            state = TMState(ta_state=jnp.broadcast_to(
-                state.ta_state, (n_replicas,) + state.ta_state.shape
-            ))
+        self._svc = TMService(cfg, state, ServiceConfig(
+            replicas=n_replicas, buffer_capacity=buffer_capacity,
+            chunk=chunk, seed=seed, mesh=mesh,
+        ), rt=rt)
 
-        self.cfg = cfg
-        self.rt = rt
-        self.n_replicas = n_replicas
-        self.chunk = max(1, min(chunk, buffer_capacity))
-        self.mesh = mesh
+    @classmethod
+    def _from_service(cls, svc: TMService) -> "OnlineFleet":
+        fleet = cls.__new__(cls)
+        fleet._svc = svc
+        return fleet
 
-        if isinstance(seed, (int, np.integer)):
-            base = jax.random.PRNGKey(int(seed))
-            keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(
-                jnp.arange(n_replicas)
-            )
-        else:
-            if len(seed) != n_replicas:
-                raise ValueError(
-                    f"need {n_replicas} seeds, got {len(seed)}"
-                )
-            keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seed])
-        self._keys = keys                                  # [K, key]
+    # -- service passthrough -------------------------------------------------
 
-        K = n_replicas
-        buf1 = buf_mod.make(buffer_capacity, cfg.n_features)
-        bufs = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (K,) + a.shape), buf1
-        )
-        self.ss = SessionState(
-            tm=state, buf=bufs, step=jnp.zeros((K,), jnp.int32)
-        )
-        if mesh is not None:
-            sh = shard_mod.replica_shardings(
-                (self.ss, self._keys), mesh, n_replicas=K
-            )
-            self.ss, self._keys = jax.tree.map(
-                jax.device_put, (self.ss, self._keys), sh
-            )
-        self.dropped = np.zeros(K, dtype=np.int64)  # backpressure events
+    @property
+    def service(self) -> TMService:
+        """The fleet-native surface this shim fronts."""
+        return self._svc
+
+    @property
+    def cfg(self) -> TMConfig:
+        return self._svc.cfg
+
+    @property
+    def rt(self) -> TMRuntime:
+        return self._svc.rt
+
+    @property
+    def n_replicas(self) -> int:
+        return self._svc.n_replicas
+
+    @property
+    def chunk(self) -> int:
+        return self._svc.chunk
+
+    @property
+    def mesh(self) -> Optional[Mesh]:
+        return self._svc.mesh
+
+    @property
+    def ss(self) -> SessionState:
+        return self._svc.ss
+
+    @ss.setter
+    def ss(self, value: SessionState):
+        self._svc.ss = value
 
     # -- producer side ------------------------------------------------------
 
     def offer_rows(self, xs, ys, mask=None) -> np.ndarray:
-        """One datapoint into every (masked) replica's buffer; [K] accepted."""
-        K = self.n_replicas
-        xs = jnp.broadcast_to(
-            jnp.asarray(xs, dtype=bool), (K, self.cfg.n_features)
-        )
-        ys = jnp.broadcast_to(jnp.asarray(ys, dtype=jnp.int32), (K,))
-        mask = (
-            jnp.ones((K,), dtype=bool) if mask is None
-            else jnp.asarray(mask, dtype=bool)
-        )
-        self.ss, oks = _enqueue_rows(self.cfg, self.ss, xs, ys, mask)
-        accepted = np.asarray(oks)
-        self.dropped += np.asarray(mask) & ~accepted
-        return accepted
+        """One datapoint into every (masked) replica's stream; [K] accepted."""
+        return self._svc.submit_rows(xs, ys, mask)
 
     def offer(self, r: int, x, y) -> bool:
-        """Push one datapoint into replica ``r``'s buffer (the per-member
-        ingress; routing one dispatch per point — batch with offer_rows)."""
-        mask = np.zeros(self.n_replicas, dtype=bool)
-        mask[r] = True
-        return bool(self.offer_rows(x, y, mask)[r])
+        """Push one datapoint into replica ``r``'s stream (the per-member
+        ingress; staged host-side by the batch router, so a loop of offers
+        costs one device dispatch per flushed block, not one per point)."""
+        return self._svc.submit(r, x, y)
 
     # -- consumer side ------------------------------------------------------
 
@@ -190,43 +132,9 @@ class OnlineFleet:
         max_points,
         on_chunk: Optional[Callable[[ChunkAux], None]] = None,
     ) -> np.ndarray:
-        """Consume up to ``max_points`` buffered rows PER REPLICA; [K] trained.
-
-        Chunked like :meth:`OnlineSession.learn_available` — one jitted
-        replicated call per chunk — but every dispatch advances the whole
-        fleet. Per-replica RNG/termination semantics exactly mirror K
-        independent sessions: a replica's key splits once per chunk it
-        participates in, and a replica retires once its budget is met or
-        its buffer drains early, without burning further key splits.
-
-        ``on_chunk`` receives each chunk's :class:`ChunkAux` with leading
-        replica axis ``[K, chunk]``; without it the monitoring contraction
-        is compiled out entirely.
-        """
-        K = self.n_replicas
-        budget = np.broadcast_to(
-            np.asarray(max_points, dtype=np.int64), (K,)
-        ).copy()
-        trained = np.zeros(K, dtype=np.int64)
-        active = trained < budget
-        monitor = on_chunk is not None
-        while active.any():
-            want = np.where(
-                active, np.minimum(self.chunk, budget - trained), 0
-            ).astype(np.int32)
-            self._keys, chunk_keys = _advance_keys(
-                self._keys, jnp.asarray(active)
-            )
-            self.ss, n, aux = online_mod._consume_many_replicated(
-                self.cfg, self.chunk, self.ss, self.rt,
-                jnp.asarray(want), chunk_keys, monitor=monitor,
-            )
-            n = np.asarray(n, dtype=np.int64)
-            trained += n
-            if monitor and n.any():
-                on_chunk(aux)
-            active &= (n == want) & (trained < budget)
-        return trained
+        """Consume up to ``max_points`` buffered rows PER REPLICA; [K]
+        trained. See :meth:`TMService.drain`."""
+        return self._svc.drain(max_points, on_chunk)
 
     # -- inference ----------------------------------------------------------
 
@@ -236,17 +144,16 @@ class OnlineFleet:
         ``xs`` is [B, f] (the same batch served by all members) or
         [K, B, f] (one batch per member).
         """
-        xs = jnp.asarray(xs, dtype=bool)
-        if xs.ndim == 2:
-            xs = xs[None]  # D = 1: one shared stream, factored (stored once)
-        return np.asarray(tm_mod.predict_batch_replicated(
-            self.cfg, self.ss.tm, self.rt, xs
-        ))
+        return self._svc.serve(xs)
 
     @property
     def buffered(self) -> np.ndarray:
-        return np.asarray(self.ss.buf.size)
+        return self._svc.buffered
+
+    @property
+    def dropped(self) -> np.ndarray:
+        return self._svc.dropped
 
     @property
     def steps(self) -> np.ndarray:
-        return np.asarray(self.ss.step)
+        return self._svc.steps

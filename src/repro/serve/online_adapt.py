@@ -1,21 +1,22 @@
 """The paper's Fig-3 online-learning FSM at the serving layer.
 
-Two managers share the same control shape (offline train -> accuracy
-analysis -> [serve + interleaved online updates -> periodic re-analysis]
-with the §5.3.2 mitigation policy: on degradation past a threshold, roll
-back to the last known-good state):
+The FSM itself — offer -> buffer -> interleaved train/infer with periodic
+accuracy analysis and the §5.3.2 mitigation policy (roll back to the last
+known-good state on degradation) — lives in ONE place now:
+:class:`repro.serve.service.AdaptPolicy` driven by
+:class:`repro.serve.service.TMService`, on ``[K]`` arrays. This module
+keeps the pre-redesign faces as thin shims (no FSM or drain logic of
+their own; pinned bitwise to the old implementations by
+tests/test_service.py):
 
-* :class:`TMOnlineAdaptManager` — the paper's own machine. Serving inference
-  and analysis both route through the **batch-first dispatched kernel path**
-  (``tm.predict_batch`` / ``accuracy.analyze``; DESIGN.md §8) and online
-  updates drain through the chunked ``online._consume_many`` scan — the
-  served numbers are produced by exactly the code the benchmarks measure.
-* :class:`OnlineAdaptManager` — the same FSM generalized to LM serving for
-  any arch in `repro.configs` (DESIGN.md §4: what transfers).
-* :class:`TMFleetAdaptManager` — the FSM lifted to a whole serving fleet
-  (:class:`repro.serve.fleet.OnlineFleet`): K machines share every device
-  dispatch while cadence counters, best-state snapshots and §5.3.2
-  rollbacks run per replica (DESIGN.md §10).
+* :class:`TMOnlineAdaptManager` — the paper's own machine: the K = 1
+  slice, scalar history/counters.
+* :class:`TMFleetAdaptManager` — the same FSM for a whole serving fleet,
+  per-replica ``[K]`` counters/snapshots/rollbacks and per-replica
+  ``s``/``T`` runtime ports (DESIGN.md §10-§11).
+* :class:`OnlineAdaptManager` — the FSM generalized to LM serving for any
+  arch in `repro.configs` (DESIGN.md §4: what transfers); independent of
+  the TM service surface.
 """
 from __future__ import annotations
 
@@ -27,12 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import accuracy as acc_mod
-from repro.core import online as online_mod
+from repro.core.online import OnlineSession
 from repro.core.tm import TMConfig, TMRuntime, TMState
-from repro.models import transformer
-from repro.train import checkpoint as ckpt_mod
-from repro.train import train_step as ts_mod
+from repro.serve.fleet import OnlineFleet
+from repro.serve.service import AdaptPolicy, ServiceConfig, TMService
 
 
 @dataclasses.dataclass
@@ -42,9 +41,13 @@ class TMOnlineAdaptConfig:
     buffer_capacity: int = 64
     chunk: int = 16                   # datapoints drained per jitted call
 
+    def policy(self) -> AdaptPolicy:
+        return AdaptPolicy(analyze_every=self.analyze_every,
+                           rollback_threshold=self.rollback_threshold)
+
 
 class TMOnlineAdaptManager:
-    """Fig-3 FSM serving the TM itself, on the batch-first kernel path.
+    """Fig-3 FSM serving the TM itself — the K = 1 face of ``TMService``.
 
     * ``serve(xs)``  — batched inference (``tm.predict_batch``).
     * ``observe(x, y)`` — labelled traffic into the cyclic buffer; every
@@ -56,77 +59,68 @@ class TMOnlineAdaptManager:
     def __init__(self, cfg: TMConfig, state: TMState, rt: TMRuntime,
                  eval_x, eval_y, oc: Optional[TMOnlineAdaptConfig] = None,
                  seed: int = 0):
-        self.cfg, self.rt = cfg, rt
         self.oc = oc or TMOnlineAdaptConfig()
-        self.eval_x = jnp.asarray(eval_x, dtype=bool)
-        self.eval_y = jnp.asarray(eval_y, dtype=jnp.int32)
-        self.session = online_mod.OnlineSession(
-            cfg, state, rt,
-            buffer_capacity=self.oc.buffer_capacity,
-            chunk=self.oc.chunk, seed=seed,
-        )
-        self.history: list = []       # (consumed_steps, eval_accuracy)
-        self.rollbacks = 0
-        self.lost = 0                 # datapoints dropped even after retry
-        self._since_analysis = 0
-        self._best: Optional[float] = None
-        self._best_state: TMState = self.session.ss.tm
+        self._svc = TMService(cfg, state, ServiceConfig(
+            replicas=1, buffer_capacity=self.oc.buffer_capacity,
+            chunk=self.oc.chunk, policy=self.oc.policy(), seed=[int(seed)],
+        ), rt=rt, eval_x=eval_x, eval_y=eval_y)
+        self.session = OnlineSession._from_service(self._svc)
+
+    @property
+    def service(self) -> TMService:
+        return self._svc
+
+    @property
+    def cfg(self) -> TMConfig:
+        return self._svc.cfg
+
+    @property
+    def rt(self) -> TMRuntime:
+        return self._svc.rt
+
+    @property
+    def eval_x(self):
+        return self._svc.eval_x
+
+    @property
+    def eval_y(self):
+        return self._svc.eval_y
+
+    @property
+    def history(self) -> list:
+        """(consumed_steps, eval_accuracy) pairs, scalar as ever."""
+        return [(int(s[0]), float(a[0])) for s, a in self._svc.history]
+
+    @property
+    def rollbacks(self) -> int:
+        return int(self._svc.rollbacks[0])
+
+    @property
+    def lost(self) -> int:
+        """Datapoints dropped even after the backpressure retry."""
+        return int(self._svc.lost[0])
 
     def serve(self, xs) -> np.ndarray:
         """Batched predictions for live traffic (the shipped number)."""
-        return self.session.infer(xs)
+        return self._svc.serve(xs)[0]
 
     def analyze(self) -> float:
-        acc = float(acc_mod.analyze(
-            self.cfg, self.session.ss.tm, self.rt, self.eval_x, self.eval_y
-        ))
-        self.history.append((int(self.session.ss.step), acc))
-        return acc
+        return float(self._svc.analyze()[0])
 
     def offline_train(self, xs, ys, n_epochs: int = 10, seed: int = 1) -> float:
-        from repro.core import feedback as fb_mod
-
-        st = fb_mod.train_epochs(
-            self.cfg, self.session.ss.tm, self.rt,
-            jnp.asarray(xs, dtype=bool), jnp.asarray(ys, dtype=jnp.int32),
-            jax.random.PRNGKey(seed), n_epochs,
-        )
-        self.session.ss = self.session.ss._replace(tm=st)
-        acc = self.analyze()
-        self._best, self._best_state = acc, st
-        return acc
+        return float(self._svc.offline_train(xs, ys, n_epochs, seed)[0])
 
     def observe(self, x, y) -> Optional[float]:
         """One labelled online datapoint; returns eval accuracy on analysis
         steps, None otherwise."""
-        chunk = self.session.chunk  # session clamps to [1, buffer_capacity]
-        if not self.session.offer(x, y):
-            # Backpressure: drain a chunk, then retry once. Drained points
-            # still count toward the analysis cadence. Note session.dropped
-            # counts rejection *events* (including a first attempt whose
-            # retry succeeds); ``self.lost`` counts actual losses.
-            self._since_analysis += self.session.learn_available(chunk)
-            if not self.session.offer(x, y):
-                self.lost += 1
-        self._since_analysis += self.session.learn_available(chunk)
-        if self._since_analysis < self.oc.analyze_every:
-            return None
-        self._since_analysis = 0
-        acc = self.analyze()
-        if self._best is not None and acc < self._best - self.oc.rollback_threshold:
-            # §5.3.2: accuracy collapsed — restore the known-good TA bank.
-            self.session.ss = self.session.ss._replace(tm=self._best_state)
-            self.rollbacks += 1
-        elif self._best is None or acc > self._best:
-            self._best, self._best_state = acc, self.session.ss.tm
-        return acc
+        acc = self._svc.observe_rows(x, y)
+        return None if acc is None else float(acc[0])
 
 
 class TMFleetAdaptManager:
     """Fig-3 FSM for a whole serving fleet, with per-replica threshold state.
 
-    The fleet generalisation of :class:`TMOnlineAdaptManager`: K machines
-    (one :class:`~repro.serve.fleet.OnlineFleet`) share every device
+    The K > 1 face of ``TMService``: K machines share every device
     dispatch — offers, drains, analyses — while the §5.3.2 mitigation
     policy runs per replica: each member carries its own analysis-cadence
     counter, its own best-known accuracy/TA-bank snapshot, and rolls back
@@ -144,59 +138,63 @@ class TMFleetAdaptManager:
                  eval_x, eval_y, *, n_replicas: int,
                  oc: Optional[TMOnlineAdaptConfig] = None,
                  seed: Union[int, Sequence[int]] = 0, mesh=None):
-        from repro.serve.fleet import OnlineFleet
-
-        self.cfg, self.rt = cfg, rt
         self.oc = oc or TMOnlineAdaptConfig()
-        self.eval_x = jnp.asarray(eval_x, dtype=bool)
-        self.eval_y = jnp.asarray(eval_y, dtype=jnp.int32)
-        self.fleet = OnlineFleet(
-            cfg, state, rt, n_replicas=n_replicas,
-            buffer_capacity=self.oc.buffer_capacity,
-            chunk=self.oc.chunk, seed=seed, mesh=mesh,
-        )
-        K = self.fleet.n_replicas
-        self.history: list = []            # (steps [K], accuracies [K])
-        self.rollbacks = np.zeros(K, dtype=np.int64)
-        self.lost = np.zeros(K, dtype=np.int64)
-        self._since = np.zeros(K, dtype=np.int64)
-        self._best = np.full(K, np.nan)    # nan = no known-good snapshot yet
-        self._best_state: TMState = self.fleet.ss.tm
+        self._svc = TMService(cfg, state, ServiceConfig(
+            replicas=n_replicas, buffer_capacity=self.oc.buffer_capacity,
+            chunk=self.oc.chunk, policy=self.oc.policy(), seed=seed,
+            mesh=mesh,
+        ), rt=rt, eval_x=eval_x, eval_y=eval_y)
+        self.fleet = OnlineFleet._from_service(self._svc)
+
+    @property
+    def service(self) -> TMService:
+        return self._svc
+
+    @property
+    def cfg(self) -> TMConfig:
+        return self._svc.cfg
+
+    @property
+    def rt(self) -> TMRuntime:
+        return self._svc.rt
+
+    @property
+    def eval_x(self):
+        return self._svc.eval_x
+
+    @property
+    def eval_y(self):
+        return self._svc.eval_y
+
+    @property
+    def history(self) -> list:
+        """(steps [K], accuracies [K]) pairs."""
+        return self._svc.history
+
+    @property
+    def rollbacks(self) -> np.ndarray:
+        return self._svc.rollbacks
+
+    @property
+    def lost(self) -> np.ndarray:
+        return self._svc.lost
+
+    @property
+    def _since(self) -> np.ndarray:
+        return self._svc.since_analysis
 
     def serve(self, xs) -> np.ndarray:
         """Fleet predictions [K, B] for live traffic (the shipped numbers)."""
-        return self.fleet.infer(xs)
+        return self._svc.serve(xs)
 
     def analyze(self) -> np.ndarray:
         """Eval accuracy of every member in ONE contraction. [K] f32."""
-        acc = np.asarray(acc_mod.analyze_replicated(
-            self.cfg, self.fleet.ss.tm, self.rt,
-            self.eval_x[None], self.eval_y[None],   # D = 1: stored once
-        ))
-        self.history.append((self.fleet.steps, acc))
-        return acc
+        return self._svc.analyze()
 
     def offline_train(self, xs, ys, n_epochs: int = 10,
                       seed: int = 1) -> np.ndarray:
         """Offline phase for the whole fleet (one replicated epochs scan)."""
-        from repro.core import feedback as fb_mod
-
-        st = fb_mod.train_epochs_replicated(
-            self.cfg, self.fleet.ss.tm, self.rt,
-            jnp.asarray(xs, dtype=bool)[None],
-            jnp.asarray(ys, dtype=jnp.int32)[None],
-            jax.random.PRNGKey(seed)[None], n_epochs,
-        )
-        self.fleet.ss = self.fleet.ss._replace(tm=st)
-        acc = self.analyze()
-        self._best = acc.copy()
-        self._best_state = st
-        return acc
-
-    def _select_rows(self, mask: np.ndarray, new: TMState,
-                     old: TMState) -> TMState:
-        gate = online_mod.replica_gate(jnp.asarray(mask))
-        return jax.tree.map(gate, new, old)
+        return self._svc.offline_train(xs, ys, n_epochs, seed)
 
     def observe_rows(self, xs, ys, mask=None) -> Optional[np.ndarray]:
         """One labelled datapoint per (masked) replica; returns [K] eval
@@ -207,50 +205,15 @@ class TMFleetAdaptManager:
         fleet-wide: every drain is one replicated dispatch for all members,
         and drained points advance each member's OWN cadence counter.
         """
-        K = self.fleet.n_replicas
-        mask = (
-            np.ones(K, dtype=bool) if mask is None
-            else np.asarray(mask, dtype=bool)
-        )
-        chunk = self.fleet.chunk  # fleet clamps to [1, buffer_capacity],
-        # exactly like the single-machine manager's session.chunk budget
-        accepted = self.fleet.offer_rows(xs, ys, mask)
-        retry = mask & ~accepted
-        if retry.any():
-            # Backpressure: drain a chunk fleet-wide, then retry once.
-            self._since += self.fleet.drain(chunk)
-            accepted = self.fleet.offer_rows(xs, ys, retry)
-            self.lost += retry & ~accepted
-        self._since += self.fleet.drain(chunk)
-
-        due = self._since >= self.oc.analyze_every
-        if not due.any():
-            return None
-        self._since[due] = 0
-        acc = self.analyze()
-        have_best = ~np.isnan(self._best)
-        collapse = due & have_best & (
-            acc < self._best - self.oc.rollback_threshold
-        )
-        improve = due & (~have_best | (acc > self._best))
-        if collapse.any():
-            # §5.3.2 per replica: restore collapsed members' known-good
-            # TA banks; healthy members keep serving untouched.
-            self.fleet.ss = self.fleet.ss._replace(
-                tm=self._select_rows(collapse, self._best_state,
-                                     self.fleet.ss.tm)
-            )
-            self.rollbacks += collapse
-        if improve.any():
-            self._best = np.where(improve, acc, self._best)
-            self._best_state = self._select_rows(
-                improve, self.fleet.ss.tm, self._best_state
-            )
-        return acc
+        return self._svc.observe_rows(xs, ys, mask)
 
     def observe(self, r: int, x, y) -> Optional[np.ndarray]:
-        """One labelled datapoint into replica ``r`` only."""
-        mask = np.zeros(self.fleet.n_replicas, dtype=bool)
+        """One labelled datapoint into replica ``r`` only. Note the FSM
+        drains right after offering (the legacy per-point cadence), so
+        this path still costs device dispatches per point — bulk traffic
+        should go through ``service.submit``/``submit_rows`` + ``tick``,
+        where the router's batching actually pays off."""
+        mask = np.zeros(self._svc.n_replicas, dtype=bool)
         mask[r] = True
         return self.observe_rows(x, y, mask)
 
@@ -265,8 +228,10 @@ class OnlineAdaptConfig:
 class OnlineAdaptManager:
     """Host FSM; device work stays in two jitted functions (update / eval)."""
 
-    def __init__(self, cfg: ModelConfig, tc: ts_mod.TrainConfig,
-                 state: ts_mod.TrainState, oc: OnlineAdaptConfig):
+    def __init__(self, cfg: ModelConfig, tc, state, oc: OnlineAdaptConfig):
+        from repro.models import transformer
+        from repro.train import train_step as ts_mod
+
         self.cfg, self.tc, self.oc = cfg, tc, oc
         self.state = state
         self._update = jax.jit(
@@ -285,6 +250,8 @@ class OnlineAdaptManager:
         return loss
 
     def offline_train(self, batches, eval_batch: dict) -> float:
+        from repro.train import checkpoint as ckpt_mod
+
         for b in batches:
             self.state, _ = self._update(self.state, b)
             self._steps += 1
@@ -295,6 +262,8 @@ class OnlineAdaptManager:
 
     def online_step(self, batch: dict, eval_batch: dict) -> Optional[float]:
         """One labelled online update; periodic analysis + rollback policy."""
+        from repro.train import checkpoint as ckpt_mod
+
         self.state, _ = self._update(self.state, batch)
         self._steps += 1
         if self._steps % self.oc.analyze_every:

@@ -1,0 +1,565 @@
+"""TMService: the one fleet-native serving surface (a single machine is K=1).
+
+The paper's deliverable is a managed serving *system* — Fig. 3's
+offer -> cyclic buffer -> interleaved train/infer loop with the §5.3.2
+mitigation policy — and MATADOR (arXiv 2403.10538) plus the
+runtime-tunable eFPGA TM (arXiv 2502.07823) both show the multi-instance
+form winning on ONE clean control interface with per-instance
+hyperparameters. :class:`TMService` is that interface here:
+
+* ``submit`` / ``submit_rows`` — labelled traffic, staged host-side by a
+  :class:`~repro.serve.router.BatchRouter` and flushed as packed
+  ``[K, B_ingress]`` row-batches (one jitted dispatch per flush, not one
+  per datapoint).
+* ``serve`` — fleet inference, one replica-first clause contraction.
+* ``tick`` — the Fig-3 consumer cycle: flush ingress, drain each
+  replica's budget through online training, advance the analysis cadence
+  and apply the §5.3.2 policy (:class:`AdaptPolicy`, per replica).
+
+Everything that used to be two parallel APIs — ``OnlineSession`` /
+``TMOnlineAdaptManager`` (scalar) vs ``OnlineFleet`` /
+``TMFleetAdaptManager`` (``[K]``) — is now a thin shim over this class;
+the K = 1 slice reproduces the scalar semantics bit for bit (pinned by
+tests/test_service.py against oracles transcribed from the pre-redesign
+implementations). K = 1 with scalar runtime ports additionally keeps the
+specialized single-machine drain body (`online._consume_many`; the
+replicated plane costs ~1.3x at R = 1, DESIGN.md §10), which the same
+parity suite pins bitwise against the replicated path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import accuracy as acc_mod
+from repro.core import feedback as fb_mod
+from repro.core import online as online_mod
+from repro.core import tm as tm_mod
+from repro.core.online import ChunkAux, SessionState
+from repro.core.tm import TMConfig, TMRuntime, TMState, init_runtime
+from repro.data import buffer as buf_mod
+from repro.distributed import sharding as shard_mod
+from repro.serve import router as router_mod
+
+
+@jax.jit
+def _advance_keys(keys, active):
+    """Split every ACTIVE replica's RNG key; retired replicas keep theirs.
+
+    Returns (new persistent keys [K], chunk keys [K]). One jitted dispatch
+    per chunk — a replica's key splits exactly once per chunk it
+    participates in, matching a standalone session's per-chunk split (the
+    chunk keys handed to retired replicas are unused: their row budget for
+    the chunk is 0, so no state is touched).
+    """
+    k2 = jax.vmap(jax.random.split)(keys)               # [K, 2, key]
+    return jnp.where(active[:, None], k2[:, 0], keys), k2[:, 1]
+
+
+def _select_replicas(mask, new: TMState, old: TMState) -> TMState:
+    """Per-replica tree select: replica r takes ``new`` where mask[r]."""
+    gate = online_mod.replica_gate(jnp.asarray(mask))
+    return jax.tree.map(gate, new, old)
+
+
+# ---------------------------------------------------------------------------
+# The Fig-3 FSM (§5.3.2 mitigation policy), once, on [K] arrays.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _PolicyState:
+    """Host-side FSM state of :class:`AdaptPolicy`, all per replica."""
+
+    since: np.ndarray          # [K] i64 — points consumed since last analysis
+    best: np.ndarray           # [K] f64 — best known accuracy (nan = none yet)
+    rollbacks: np.ndarray      # [K] i64 — §5.3.2 rollbacks fired
+    lost: np.ndarray           # [K] i64 — datapoints lost even after retry
+    best_state: Optional[TMState] = None   # replicated [K, ...] snapshot
+
+
+@dataclasses.dataclass
+class AdaptPolicy:
+    """The §5.3.2 mitigation policy: periodic analysis + rollback, per replica.
+
+    ONE implementation on ``[K]`` arrays — K = 1 yields exactly the old
+    scalar ``TMOnlineAdaptManager`` semantics, K > 1 the old
+    ``TMFleetAdaptManager`` semantics (both shims now delegate here; the
+    ~200 duplicated FSM lines are gone). A member that consumed
+    ``analyze_every`` points since its last analysis is *due*: its eval
+    accuracy is re-measured, and it rolls back to its own known-good TA
+    bank on a drop past ``rollback_threshold`` — or snapshots a new best.
+    Members that are not due are never touched.
+    """
+
+    analyze_every: int = 32           # online datapoints between analyses
+    rollback_threshold: float = 0.1   # absolute accuracy drop -> rollback
+
+    def init(self, n_replicas: int) -> _PolicyState:
+        K = n_replicas
+        return _PolicyState(
+            since=np.zeros(K, dtype=np.int64),
+            best=np.full(K, np.nan),
+            rollbacks=np.zeros(K, dtype=np.int64),
+            lost=np.zeros(K, dtype=np.int64),
+        )
+
+    def due(self, ps: _PolicyState) -> np.ndarray:
+        return ps.since >= self.analyze_every
+
+    def apply(self, ps: _PolicyState, due: np.ndarray, acc: np.ndarray,
+              tm: TMState) -> tuple[TMState, np.ndarray]:
+        """One policy transition for the due members. Returns
+        (new TA banks, rolled-back mask [K])."""
+        ps.since[due] = 0
+        have_best = ~np.isnan(ps.best)
+        collapse = due & have_best & (acc < ps.best - self.rollback_threshold)
+        improve = due & (~have_best | (acc > ps.best))
+        if collapse.any():
+            # §5.3.2 per replica: restore collapsed members' known-good
+            # TA banks; healthy members keep serving untouched.
+            tm = _select_replicas(collapse, ps.best_state, tm)
+            ps.rollbacks += collapse
+        if improve.any():
+            ps.best = np.where(improve, acc, ps.best)
+            ps.best_state = _select_replicas(improve, tm, ps.best_state)
+        return tm, collapse
+
+    def snapshot(self, ps: _PolicyState, acc: np.ndarray, tm: TMState):
+        """Unconditional known-good snapshot (the offline-train baseline)."""
+        ps.best = np.asarray(acc, dtype=np.float64).copy()
+        ps.best_state = tm
+
+
+class TickReport(NamedTuple):
+    """What one :meth:`TMService.tick` did, per replica."""
+
+    trained: np.ndarray                 # [K] i64 — points consumed
+    accuracy: Optional[np.ndarray]      # [K] f32 — eval accs, None if not due
+    rolled_back: np.ndarray             # [K] bool — §5.3.2 rollbacks fired
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    """Construction-time knobs of a :class:`TMService`.
+
+    ``s``/``T`` ride the runtime's per-replica hyperparameter ports:
+    scalars give a homogeneous fleet, length-K sequences give every member
+    its own (s, T) without re-JIT. ``ingress_block`` is B_ingress — the
+    router's staged rows per replica per flushed dispatch.
+    """
+
+    replicas: int = 1
+    buffer_capacity: int = 64
+    chunk: int = 16                   # datapoints drained per jitted call
+    ingress_block: int = 32           # staged rows per replica per flush
+    s: Union[float, Sequence[float], None] = None
+    T: Union[int, Sequence[int], None] = None
+    policy: AdaptPolicy = dataclasses.field(default_factory=AdaptPolicy)
+    seed: Union[int, Sequence[int]] = 0
+    mesh: Optional[Mesh] = None
+
+    def runtime(self, cfg: TMConfig) -> TMRuntime:
+        """A fault-free runtime with this config's s/T ports."""
+        rt = init_runtime(cfg)
+        for name, port, dtype in (("s", self.s, jnp.float32),
+                                  ("T", self.T, jnp.int32)):
+            if port is None:
+                continue
+            if np.ndim(port) == 0:
+                rt = rt._replace(**{name: dtype(port)})
+            else:
+                if len(port) != self.replicas:
+                    raise ValueError(
+                        f"per-replica {name} carries {len(port)} entries, "
+                        f"expected {self.replicas}"
+                    )
+                rt = rt._replace(**{name: jnp.asarray(port, dtype)})
+        return rt
+
+
+class TMService:
+    """K concurrent Fig-3 machines behind one control surface (K >= 1).
+
+    Device layout is the replicated kernel contract (DESIGN.md §9/§10):
+    every member owns its data stream, so state, buffers, budgets and RNG
+    keys all lead with K, per-replica hyperparameters ride the runtime's
+    ``s``/``T`` ports, and each drain chunk advances the whole fleet in
+    ONE ``_consume_many_replicated`` call. Ingress is the
+    :class:`~repro.serve.router.BatchRouter` staging queue — ``submit`` is
+    a host-side numpy write; the device sees packed ``[K, B_ingress]``
+    blocks.
+
+    ``state`` may be a single machine's :class:`TMState` (broadcast to K
+    identical banks) or an already-replicated ``[K, ...]`` state. ``rt``
+    overrides the runtime built from ``sc.s``/``sc.T`` (shims pass their
+    caller's runtime through). ``eval_x``/``eval_y`` are the accuracy-
+    analysis set; without them ``tick`` still drains but never analyzes.
+    """
+
+    def __init__(
+        self,
+        cfg: TMConfig,
+        state: TMState,
+        sc: Optional[ServiceConfig] = None,
+        *,
+        rt: Optional[TMRuntime] = None,
+        eval_x=None,
+        eval_y=None,
+    ):
+        sc = sc or ServiceConfig()
+        replicated = state.ta_state.ndim == 4
+        K = sc.replicas
+        if replicated and state.ta_state.shape[0] != K:
+            raise ValueError(
+                f"state carries {state.ta_state.shape[0]} replicas, "
+                f"expected {K}"
+            )
+        if not replicated:
+            state = TMState(ta_state=jnp.broadcast_to(
+                state.ta_state, (K,) + state.ta_state.shape
+            ))
+
+        self.cfg = cfg
+        self.sc = sc
+        self.rt = rt if rt is not None else sc.runtime(cfg)
+        self.n_replicas = K
+        self.chunk = max(1, min(sc.chunk, sc.buffer_capacity))
+        self.mesh = sc.mesh
+        self.policy = sc.policy
+        self.eval_x = None if eval_x is None else jnp.asarray(eval_x, bool)
+        self.eval_y = None if eval_y is None else jnp.asarray(eval_y,
+                                                              jnp.int32)
+        # K = 1 with scalar runtime ports keeps the specialized
+        # single-machine drain/inference bodies (DESIGN.md §10: the
+        # replicated plane costs ~1.3x at R = 1); pinned bitwise against
+        # the replicated path by the parity suites.
+        self._k1 = (K == 1 and self.mesh is None
+                    and jnp.ndim(self.rt.s) == 0 and jnp.ndim(self.rt.T) == 0)
+
+        seed = sc.seed
+        if isinstance(seed, (int, np.integer)):
+            base = jax.random.PRNGKey(int(seed))
+            keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(
+                jnp.arange(K)
+            )
+        else:
+            if len(seed) != K:
+                raise ValueError(f"need {K} seeds, got {len(seed)}")
+            keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seed])
+        self._keys = keys                                  # [K, key]
+
+        buf1 = buf_mod.make(sc.buffer_capacity, cfg.n_features)
+        bufs = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (K,) + a.shape), buf1
+        )
+        self._ss = SessionState(
+            tm=state, buf=bufs, step=jnp.zeros((K,), jnp.int32)
+        )
+        if self.mesh is not None:
+            sh = shard_mod.replica_shardings(
+                (self._ss, self._keys), self.mesh, n_replicas=K
+            )
+            self._ss, self._keys = jax.tree.map(
+                jax.device_put, (self._ss, self._keys), sh
+            )
+        self.router = router_mod.BatchRouter(
+            K, cfg.n_features, sc.buffer_capacity, sc.ingress_block
+        )
+        self._dev_size = np.zeros(K, dtype=np.int64)  # buffer-occupancy mirror
+        self._full_mask = np.ones(K, dtype=bool)
+        self._ps = sc.policy.init(K)
+        # Like the pre-redesign managers: the initial TA banks are the
+        # known-good snapshot until an analysis/offline_train replaces it
+        # (best stays nan, so the first due analysis can only improve).
+        self._ps.best_state = self._ss.tm
+        self.history: list = []            # (steps [K], accuracies [K])
+
+    # -- device state (mirror-preserving) -----------------------------------
+
+    @property
+    def ss(self) -> SessionState:
+        """Device state, with staged ingress flushed first — so externally
+        read (and read-modify-written) state always contains every accepted
+        datapoint, exactly like the pre-staging immediate-enqueue API."""
+        self.flush()
+        return self._ss
+
+    @ss.setter
+    def ss(self, value: SessionState):
+        """Replacing device state wholesale re-syncs the occupancy mirror
+        (benchmarks pre-fill buffers this way). Traffic staged but never
+        read back via the getter still lands on the next flush."""
+        self._ss = value
+        self._dev_size = np.asarray(value.buf.size, dtype=np.int64).reshape(
+            self.n_replicas
+        ).copy()
+
+    # -- ingress (producer side) --------------------------------------------
+
+    def submit_rows(self, xs, ys, mask=None) -> np.ndarray:
+        """One labelled datapoint into every (masked) replica's stream;
+        returns accepted [K] bool (False = backpressure, counted in
+        ``dropped``). Host-side staging only — the device enqueue happens
+        on the next flush (a full staging lane flushes automatically)."""
+        mask = (self._full_mask if mask is None
+                else np.asarray(mask, dtype=bool))
+        if self.router.lane_full():
+            self.flush()
+        accepted = self.router.stage_rows(xs, ys, mask, self._dev_size)
+        if self.router.lane_full():
+            self.flush()
+        return accepted
+
+    def submit(self, r: int, x, y) -> bool:
+        """One labelled datapoint into replica ``r``'s stream."""
+        mask = np.zeros(self.n_replicas, dtype=bool)
+        mask[r] = True
+        return bool(self.submit_rows(x, y, mask)[r])
+
+    def flush(self) -> np.ndarray:
+        """Push every staged row to the device buffers — ONE jitted
+        ``_enqueue_rows`` dispatch per staged block. Returns [K] rows
+        landed. Rows a buffer rejects despite the mirror (only possible
+        when device state was swapped mid-flight) count as dropped."""
+        K = self.n_replicas
+        landed = np.zeros(K, dtype=np.int64)
+        while True:
+            block = self.router.take_block()
+            if block is None:
+                return landed
+            xs, ys, counts = block
+            self._ss, accepted = router_mod._enqueue_rows(
+                self._ss, self.router.block, xs, ys, counts
+            )
+            acc = np.asarray(accepted, dtype=np.int64)
+            self._dev_size += acc
+            self.router.dropped += counts - acc
+            landed += acc
+
+    @property
+    def buffered(self) -> np.ndarray:
+        """Datapoints awaiting consumption per replica (device + staged)."""
+        return self._dev_size + self.router.staged
+
+    @property
+    def dropped(self) -> np.ndarray:
+        """Backpressure events per replica. [K] i64."""
+        return self.router.dropped
+
+    # -- consumer side ------------------------------------------------------
+
+    def drain(
+        self,
+        max_points,
+        on_chunk: Optional[Callable[[ChunkAux], None]] = None,
+    ) -> np.ndarray:
+        """Consume up to ``max_points`` buffered rows PER REPLICA; [K]
+        trained. Flushes staged ingress first, then drains chunk by chunk
+        — one jitted call per chunk for the whole fleet (the per-cycle
+        budget of Fig. 3, K machines per dispatch). Per-replica
+        RNG/termination semantics exactly mirror K independent sessions.
+
+        ``on_chunk`` receives each chunk's :class:`ChunkAux` with leading
+        replica axis ``[K, chunk]``; without it the monitoring contraction
+        is compiled out entirely.
+        """
+        self.flush()
+        K = self.n_replicas
+        budget = np.broadcast_to(
+            np.asarray(max_points, dtype=np.int64), (K,)
+        ).copy()
+        # the drain bodies keep the occupancy mirror in sync per chunk (not
+        # here, after the fact) so an on_chunk callback raising mid-drain
+        # can't desync accounting from the device
+        return (self._drain_k1(budget, on_chunk) if self._k1
+                else self._drain_replicated(budget, on_chunk))
+
+    def _drain_replicated(self, budget, on_chunk) -> np.ndarray:
+        K = self.n_replicas
+        trained = np.zeros(K, dtype=np.int64)
+        active = trained < budget
+        monitor = on_chunk is not None
+        while active.any():
+            want = np.where(
+                active, np.minimum(self.chunk, budget - trained), 0
+            ).astype(np.int32)
+            self._keys, chunk_keys = _advance_keys(
+                self._keys, jnp.asarray(active)
+            )
+            self._ss, n, aux = online_mod._consume_many_replicated(
+                self.cfg, self.chunk, self._ss, self.rt,
+                jnp.asarray(want), chunk_keys, monitor=monitor,
+            )
+            n = np.asarray(n, dtype=np.int64)
+            trained += n
+            self._dev_size -= n
+            if monitor and n.any():
+                on_chunk(aux)
+            active &= (n == want) & (trained < budget)
+        return trained
+
+    def _drain_k1(self, budget, on_chunk) -> np.ndarray:
+        """The specialized single-machine drain body on the K = 1 slice."""
+        ss1 = jax.tree.map(lambda a: a[0], self._ss)
+        trained, budget1 = 0, int(budget[0])
+        monitor = on_chunk is not None
+        while trained < budget1:
+            want = min(self.chunk, budget1 - trained)
+            self._keys, chunk_keys = _advance_keys(
+                self._keys, jnp.ones((1,), bool)
+            )
+            ss1, n, aux = online_mod._consume_many(
+                self.cfg, self.chunk, ss1, self.rt,
+                jnp.int32(want), chunk_keys[0], monitor=monitor,
+            )
+            n = int(n)
+            trained += n
+            # commit state + mirror before the callback (see drain())
+            self._ss = jax.tree.map(lambda a: a[None], ss1)
+            self._dev_size[0] -= n
+            if monitor and n:
+                on_chunk(jax.tree.map(lambda a: a[None], aux))
+            if n < want:  # buffer drained before the budget ran out
+                break
+        return np.asarray([trained], dtype=np.int64)
+
+    # -- inference ----------------------------------------------------------
+
+    def serve(self, xs) -> np.ndarray:
+        """Fleet inference [K, B]: every member's batch in ONE contraction.
+
+        ``xs`` is [B, f] (the same batch served by all members) or
+        [K, B, f] (one batch per member).
+        """
+        xs = jnp.asarray(xs, dtype=bool)
+        if xs.ndim == 2 and self._k1:
+            tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+            return np.asarray(
+                tm_mod.predict_batch(self.cfg, tm1, self.rt, xs)
+            )[None]
+        if xs.ndim == 2:
+            xs = xs[None]  # D = 1: one shared stream, factored (stored once)
+        return np.asarray(tm_mod.predict_batch_replicated(
+            self.cfg, self._ss.tm, self.rt, xs
+        ))
+
+    # -- analysis + the Fig-3 policy loop -----------------------------------
+
+    def analyze(self) -> np.ndarray:
+        """Eval accuracy of every member in ONE contraction. [K] f32."""
+        if self.eval_x is None:
+            raise ValueError("TMService built without an eval set")
+        if self._k1:
+            tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+            acc = np.asarray([float(acc_mod.analyze(
+                self.cfg, tm1, self.rt, self.eval_x, self.eval_y
+            ))], dtype=np.float32)   # same [K] f32 contract as the K > 1 path
+        else:
+            acc = np.asarray(acc_mod.analyze_replicated(
+                self.cfg, self._ss.tm, self.rt,
+                self.eval_x[None], self.eval_y[None],   # D = 1: stored once
+            ))
+        self.history.append((self.steps, acc))
+        return acc
+
+    def offline_train(self, xs, ys, n_epochs: int = 10,
+                      seed: int = 1) -> np.ndarray:
+        """Offline phase for the whole fleet (one replicated epochs scan);
+        the result becomes every member's known-good baseline."""
+        xs = jnp.asarray(xs, dtype=bool)
+        ys = jnp.asarray(ys, dtype=jnp.int32)
+        if self._k1:
+            tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+            st = fb_mod.train_epochs(
+                self.cfg, tm1, self.rt, xs, ys,
+                jax.random.PRNGKey(seed), n_epochs,
+            )
+            st = jax.tree.map(lambda a: a[None], st)
+        else:
+            st = fb_mod.train_epochs_replicated(
+                self.cfg, self._ss.tm, self.rt, xs[None], ys[None],
+                jax.random.PRNGKey(seed)[None], n_epochs,
+            )
+        self._ss = self._ss._replace(tm=st)
+        acc = self.analyze()
+        self.policy.snapshot(self._ps, acc, st)
+        return acc
+
+    def _maybe_analyze(self) -> Optional[tuple[np.ndarray, np.ndarray]]:
+        """Run analysis + the §5.3.2 policy if any member is due.
+        Returns (accuracies [K], rolled-back mask [K]) or None."""
+        if self.eval_x is None:
+            return None
+        due = self.policy.due(self._ps)
+        if not due.any():
+            return None
+        acc = self.analyze()
+        tm, rolled = self.policy.apply(self._ps, due, acc, self._ss.tm)
+        self._ss = self._ss._replace(tm=tm)
+        return acc, rolled
+
+    def tick(
+        self,
+        max_points=None,
+        on_chunk: Optional[Callable[[ChunkAux], None]] = None,
+    ) -> TickReport:
+        """One Fig-3 consumer cycle: flush ingress, drain up to
+        ``max_points`` (default: one chunk) per replica, advance the
+        analysis cadence, and apply the mitigation policy to due members.
+        """
+        budget = self.chunk if max_points is None else max_points
+        trained = self.drain(budget, on_chunk)
+        self._ps.since += trained
+        out = self._maybe_analyze()
+        if out is None:
+            return TickReport(trained, None,
+                              np.zeros(self.n_replicas, dtype=bool))
+        return TickReport(trained, out[0], out[1])
+
+    def observe_rows(self, xs, ys, mask=None) -> Optional[np.ndarray]:
+        """The legacy managers' per-point FSM step: one labelled datapoint
+        per (masked) replica, drain-retry backpressure, one chunk-budget
+        drain, then cadence/analysis/rollback. Returns [K] eval accuracies
+        when at least one member hit its cadence, None otherwise.
+
+        Drained points advance each member's OWN cadence counter — a
+        backpressure drain's points still count toward the analysis
+        cadence, exactly like the pre-redesign managers.
+        """
+        K = self.n_replicas
+        mask = (np.ones(K, dtype=bool) if mask is None
+                else np.asarray(mask, dtype=bool))
+        accepted = self.submit_rows(xs, ys, mask)
+        retry = mask & ~accepted
+        if retry.any():
+            # Backpressure: drain a chunk fleet-wide, then retry once.
+            self._ps.since += self.drain(self.chunk)
+            accepted = self.submit_rows(xs, ys, retry)
+            self._ps.lost += retry & ~accepted
+        self._ps.since += self.drain(self.chunk)
+        out = self._maybe_analyze()
+        return None if out is None else out[0]
+
+    # -- observability ------------------------------------------------------
+
+    @property
+    def steps(self) -> np.ndarray:
+        return np.asarray(self._ss.step)
+
+    @property
+    def rollbacks(self) -> np.ndarray:
+        return self._ps.rollbacks
+
+    @property
+    def lost(self) -> np.ndarray:
+        return self._ps.lost
+
+    @property
+    def since_analysis(self) -> np.ndarray:
+        return self._ps.since

@@ -1,0 +1,248 @@
+"""BatchRouter ingress properties: nothing lost, nothing reordered.
+
+The router defers device enqueues (host-side staging, packed block
+flushes), so the property that matters is conservation + FIFO order per
+replica under ARBITRARY interleavings of submit / submit_rows / flush /
+drain / tick: every accepted datapoint reaches its replica's ring buffer
+exactly once, in submission order, and every rejected one is a counted
+backpressure drop. Rows are tagged with a unique id encoded in the
+feature bits so reordering cannot hide.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TMConfig, init_runtime, init_state
+from repro.serve import AdaptPolicy, ServiceConfig, TMService
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency (requirements-dev.txt)
+    HAVE_HYPOTHESIS = False
+
+K, CAP, BLOCK, CHUNK, F = 3, 6, 3, 4, 16
+
+
+def _make_service(seed=0):
+    cfg = TMConfig(n_features=F, max_classes=3, max_clauses=16, n_states=16)
+    return TMService(cfg, init_state(cfg), ServiceConfig(
+        replicas=K, buffer_capacity=CAP, chunk=CHUNK, ingress_block=BLOCK,
+        s=3.0, T=15, seed=seed,
+    ))
+
+
+def _row(uid: int):
+    """A unique datapoint: uid's bits as features (16 bits = plenty)."""
+    x = np.array([(uid >> b) & 1 for b in range(F)], dtype=bool)
+    return x, uid % 3
+
+
+def _uid(x: np.ndarray) -> int:
+    return int(sum(int(v) << b for b, v in enumerate(x)))
+
+
+def _device_queue(svc, r):
+    """Replica r's ring-buffer content, oldest first, as uids."""
+    buf = svc.ss.buf
+    data_x = np.asarray(buf.data_x[r])
+    head = int(np.asarray(buf.head[r]))
+    size = int(np.asarray(buf.size[r]))
+    return [_uid(data_x[(head + i) % CAP]) for i in range(size)]
+
+
+class _Model:
+    """Host-side reference: per-replica FIFO + conservation counters."""
+
+    def __init__(self):
+        self.queue = [[] for _ in range(K)]   # accepted, not yet trained
+        self.submitted = np.zeros(K, dtype=np.int64)
+        self.dropped = np.zeros(K, dtype=np.int64)
+        self.trained = np.zeros(K, dtype=np.int64)
+
+    def submit(self, r, uid) -> bool:
+        self.submitted[r] += 1
+        if len(self.queue[r]) >= CAP:
+            self.dropped[r] += 1
+            return False
+        self.queue[r].append(uid)
+        return True
+
+    def drain(self, budget):
+        out = []
+        for r in range(K):
+            n = min(int(budget[r]), len(self.queue[r]))
+            del self.queue[r][:n]
+            self.trained[r] += n
+            out.append(n)
+        return np.asarray(out)
+
+
+def _check(svc, model):
+    """Conservation + order invariants (order checked on device after a
+    forced flush so staged rows are visible in the ring)."""
+    np.testing.assert_array_equal(svc.buffered,
+                                  [len(q) for q in model.queue])
+    np.testing.assert_array_equal(svc.dropped, model.dropped)
+    # conservation: every submitted point is trained, queued or dropped
+    np.testing.assert_array_equal(
+        model.submitted,
+        model.trained + svc.buffered + model.dropped,
+    )
+    svc.flush()
+    for r in range(K):
+        assert _device_queue(svc, r) == model.queue[r], (
+            f"replica {r}: device ring diverged from FIFO model"
+        )
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(0, K - 1)),
+            st.tuples(st.just("submit_rows"),
+                      st.integers(1, 2 ** K - 1)),     # nonempty mask bits
+            st.tuples(st.just("flush"), st.just(0)),
+            st.tuples(st.just("drain"), st.integers(0, 2 * CAP)),
+            st.tuples(st.just("tick"), st.integers(0, CHUNK)),
+        ),
+        max_size=30,
+    )
+
+    @settings(max_examples=20, deadline=None)
+    @given(ops_seq=_ops, seed=st.integers(0, 2 ** 31 - 1))
+    def test_router_no_loss_no_reorder(ops_seq, seed):
+        """Arbitrary submit/submit_rows/flush/drain/tick interleavings:
+        per-replica FIFO order and datapoint conservation always hold."""
+        svc = _make_service(seed)
+        model = _Model()
+        uid = 0
+        for op, arg in ops_seq:
+            if op == "submit":
+                uid += 1
+                x, y = _row(uid)
+                assert svc.submit(arg, x, y) == model.submit(arg, uid)
+            elif op == "submit_rows":
+                uid += 1
+                x, y = _row(uid)
+                mask = np.array([(arg >> r) & 1 for r in range(K)],
+                                dtype=bool)
+                got = svc.submit_rows(x, y, mask)
+                want = np.array([model.submit(r, uid) if mask[r] else False
+                                 for r in range(K)])
+                np.testing.assert_array_equal(got, want)
+            elif op == "flush":
+                svc.flush()
+            elif op == "drain":
+                np.testing.assert_array_equal(svc.drain(arg),
+                                              model.drain([arg] * K))
+            else:  # tick (no eval set: drains + cadence only)
+                rep = svc.tick(arg)
+                np.testing.assert_array_equal(rep.trained,
+                                              model.drain([arg] * K))
+                assert rep.accuracy is None
+        _check(svc, model)
+
+
+def test_router_block_flush_counts():
+    """Auto-flush fires when a staging lane fills: N submits per replica
+    cost ceil(N / B_ingress) dispatches, and explicit flush is a no-op
+    when nothing is staged."""
+    svc = _make_service()
+    uid = 0
+    for _ in range(BLOCK):        # fill every lane exactly once
+        uid += 1
+        x, y = _row(uid)
+        svc.submit_rows(x, y)
+    assert svc.router.flushes == 1      # lanes hit BLOCK -> one dispatch
+    np.testing.assert_array_equal(svc.router.staged, [0] * K)
+    svc.flush()
+    assert svc.router.flushes == 1      # nothing staged: no dispatch
+    uid += 1
+    x, y = _row(uid)
+    svc.submit(0, x, y)
+    svc.flush()
+    assert svc.router.flushes == 2
+    np.testing.assert_array_equal(svc.buffered, [BLOCK + 1, BLOCK, BLOCK])
+
+
+def test_router_rejects_against_mirror_not_device():
+    """Acceptance is decided host-side: a full buffer (device + staged)
+    rejects synchronously even though no device dispatch happened yet."""
+    svc = _make_service()
+    for i in range(CAP):
+        x, y = _row(i + 1)
+        assert svc.submit(0, x, y)
+    x, y = _row(99)
+    assert not svc.submit(0, x, y)            # full purely from staging
+    np.testing.assert_array_equal(svc.dropped, [1, 0, 0])
+    svc.drain(2)                               # frees two slots
+    assert svc.submit(0, x, y)
+    np.testing.assert_array_equal(svc.buffered, [CAP - 1, 0, 0])
+
+
+def test_submit_rows_broadcast_contract():
+    """The old offer_rows broadcast rules survive the router: [f] and
+    [1, f] features (and scalar / [1] labels) fan out to all K replicas."""
+    svc = _make_service()
+    x, y = _row(5)
+    for xs, ys in [(x, y), (x[None], np.asarray([y])),
+                   (np.broadcast_to(x, (K, F)), np.full(K, y))]:
+        np.testing.assert_array_equal(svc.submit_rows(xs, ys), [True] * K)
+    svc.flush()
+    for r in range(K):
+        assert _device_queue(svc, r) == [5, 5, 5]
+
+
+def test_mirror_survives_on_chunk_exception():
+    """A callback raising mid-drain leaves device state, occupancy mirror
+    and acceptance accounting consistent (no phantom backpressure)."""
+    svc = _make_service()
+    for i in range(CAP):
+        x, y = _row(i + 1)
+        assert svc.submit(0, x, y)
+
+    class Boom(Exception):
+        pass
+
+    calls = []
+
+    def boom(aux):
+        calls.append(aux)
+        raise Boom
+
+    with pytest.raises(Boom):
+        svc.drain(CAP, on_chunk=boom)   # CHUNK < CAP: raises on chunk 1
+    assert len(calls) == 1
+    consumed = CHUNK                     # exactly one chunk landed
+    np.testing.assert_array_equal(svc.buffered, [CAP - consumed, 0, 0])
+    np.testing.assert_array_equal(
+        svc.buffered[0], int(np.asarray(svc.ss.buf.size[0]))
+    )
+    x, y = _row(99)
+    assert svc.submit(0, x, y)           # no phantom backpressure
+    assert svc.drain(2 * CAP)[0] == CAP - consumed + 1
+
+
+def test_service_config_validates_port_lengths():
+    """Per-replica s/T sequences must match `replicas` at construction,
+    like the seed check — not fail deep in the first drained kernel."""
+    from repro.core import TMConfig, init_state
+    from repro.serve import ServiceConfig, TMService
+
+    cfg = TMConfig(n_features=F, max_classes=3, max_clauses=16, n_states=16)
+    for bad in (dict(s=[1.0, 2.0]), dict(T=[5, 15])):
+        with pytest.raises(ValueError, match="per-replica"):
+            TMService(cfg, init_state(cfg),
+                      ServiceConfig(replicas=4, **bad))
+
+
+def test_service_requires_eval_set_for_analysis():
+    svc = _make_service()
+    with pytest.raises(ValueError):
+        svc.analyze()
+    # but tick without an eval set is a plain drain (no analysis)
+    rep = svc.tick(2)
+    assert rep.accuracy is None
+    assert isinstance(svc.policy, AdaptPolicy)
+    assert jnp.ndim(svc.rt.s) == 0
