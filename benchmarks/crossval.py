@@ -58,21 +58,30 @@ def _emit(name: str, us_per_call: float, derived: str, **extra):
     RESULTS.append({"name": name, "us_per_call": us_per_call, **extra})
 
 
-def sweep_bench(n_orderings: int, seed: int = 0) -> dict:
-    """Engine vs legacy nested-vmap sweep; bitwise equality asserted."""
-    osets, _ = blocks.iris_paper_sets(n_orderings=n_orderings)
+def sweep_bench(n_orderings: int, seed: int = 0, *, cfg=None, osets=None,
+                s_values=S_GRID, T_values=T_GRID,
+                n_epochs=N_EPOCHS) -> dict:
+    """Engine vs legacy nested-vmap sweep; bitwise equality asserted.
+
+    Defaults measure the iris machine; ``cfg``/``osets`` parameterize the
+    same protocol over other workloads (benchmarks/scale.py runs it at
+    MNIST widths) so the legacy-baseline semantics live in ONE place.
+    """
+    cfg = CFG if cfg is None else cfg
+    if osets is None:
+        osets, _ = blocks.iris_paper_sets(n_orderings=n_orderings)
     off = (jnp.asarray(osets.offline_x), jnp.asarray(osets.offline_y))
     val = (jnp.asarray(osets.validation_x), jnp.asarray(osets.validation_y))
     keys = jax.random.split(jax.random.PRNGKey(seed), n_orderings)
-    s_grid = jnp.asarray(S_GRID, jnp.float32)
-    T_grid = jnp.asarray(T_GRID, jnp.int32)
+    s_grid = jnp.asarray(s_values, jnp.float32)
+    T_grid = jnp.asarray(T_values, jnp.int32)
 
     legacy = lambda: hpsearch.grid_search_device(
-        CFG, s_grid, T_grid, off, val, keys, N_EPOCHS
+        cfg, s_grid, T_grid, off, val, keys, n_epochs
     )
-    run = CrossValRun(CFG)
+    run = CrossValRun(cfg)
     engine = lambda: run.sweep(
-        *off, *val, S_GRID, T_GRID, n_epochs=N_EPOCHS, seed=seed
+        *off, *val, s_values, T_values, n_epochs=n_epochs, seed=seed
     ).val_accuracy
 
     # Interleave so background host load skews both paths equally.
@@ -88,7 +97,7 @@ def sweep_bench(n_orderings: int, seed: int = 0) -> dict:
             "replica-parallel sweep diverges from the vmap-of-scan baseline"
         )
 
-    R = len(S_GRID) * len(T_GRID) * n_orderings
+    R = len(s_values) * len(T_values) * n_orderings
     return {
         "cells": R,
         "replicas": R,

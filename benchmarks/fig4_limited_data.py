@@ -15,10 +15,13 @@ from benchmarks import common
 from repro.core import manager as mgr
 
 
-def run(n_orderings: int = 24, seed: int = 0):
-    schedule = mgr.make_schedule(online_s=1.0)
+def run(n_orderings: int = 24, seed: int = 0,
+        dataset: str = "iris", side: int | None = None):
+    params = common.system_params(dataset, side)
+    schedule = mgr.make_schedule(online_s=params.s_online)
     curve, activity, wall, O = common.run_schedule(
-        schedule, n_orderings=n_orderings, seed=seed
+        schedule, n_orderings=n_orderings, seed=seed,
+        dataset=dataset, side=side,
     )
     gains = curve[-1] - curve[0]
     derived = {

@@ -18,22 +18,25 @@ from benchmarks import common
 from repro.core import manager as mgr
 
 
-def run(n_orderings: int = 24, introduce_at: int = 5, seed: int = 0):
+def run(n_orderings: int = 24, introduce_at: int = 5, seed: int = 0,
+        dataset: str = "iris", side: int | None = None):
+    s_onl = common.system_params(dataset, side).s_online
+    kw = dict(n_orderings=n_orderings, offline_limit=None, seed=seed,
+              dataset=dataset, side=side)
     out = {}
     out["fig5_filtered_online"] = common.run_schedule(
-        mgr.make_schedule(online_s=1.0, filtered_class=0),
-        n_orderings=n_orderings, offline_limit=None, seed=seed,
+        mgr.make_schedule(online_s=s_onl, filtered_class=0), **kw
     )
     out["fig6_intro_no_online"] = common.run_schedule(
-        mgr.make_schedule(online_s=1.0, filtered_class=0,
+        mgr.make_schedule(online_s=s_onl, filtered_class=0,
                           introduce_at_cycle=introduce_at,
                           online_enabled=False),
-        n_orderings=n_orderings, offline_limit=None, seed=seed,
+        **kw,
     )
     out["fig7_intro_online"] = common.run_schedule(
-        mgr.make_schedule(online_s=1.0, filtered_class=0,
+        mgr.make_schedule(online_s=s_onl, filtered_class=0,
                           introduce_at_cycle=introduce_at),
-        n_orderings=n_orderings, offline_limit=None, seed=seed,
+        **kw,
     )
     return out, introduce_at
 

@@ -16,19 +16,21 @@ from repro.core import manager as mgr
 
 
 def run(n_orderings: int = 24, inject_at: int = 5, fraction: float = 0.2,
-        seed: int = 0):
-    and_m, or_m = faults_mod.even_spread_stuck_at(common.CFG, fraction, 0)
+        seed: int = 0, dataset: str = "iris", side: int | None = None):
+    params = common.system_params(dataset, side)
+    and_m, or_m = faults_mod.even_spread_stuck_at(params.tm, fraction, 0)
     masks = (jnp.asarray(and_m), jnp.asarray(or_m))
+    kw = dict(n_orderings=n_orderings, seed=seed, dataset=dataset, side=side)
     out = {}
     out["fig8_faults_no_online"] = common.run_schedule(
-        mgr.make_schedule(online_s=1.0, fault_masks=masks,
+        mgr.make_schedule(online_s=params.s_online, fault_masks=masks,
                           inject_at_cycle=inject_at, online_enabled=False),
-        n_orderings=n_orderings, seed=seed,
+        **kw,
     )
     out["fig9_faults_online"] = common.run_schedule(
-        mgr.make_schedule(online_s=1.0, fault_masks=masks,
+        mgr.make_schedule(online_s=params.s_online, fault_masks=masks,
                           inject_at_cycle=inject_at),
-        n_orderings=n_orderings, seed=seed,
+        **kw,
     )
     return out, inject_at
 

@@ -46,12 +46,23 @@ def _filled_buffer(xs, ys, cap):
 
 
 def drain_bench(K: int = 8, cap: int = 64, chunk: int = 16,
-                trials: int = 5) -> dict:
-    """Fleet drain vs K serial session drains; bitwise equality asserted."""
-    xs, ys = iris.load()
-    rt = init_runtime(CFG, s=3.0, T=15)
+                trials: int = 5, *, cfg=None, data=None, rt=None) -> dict:
+    """Fleet drain vs K serial session drains; bitwise equality asserted.
+
+    Defaults measure the iris machine; ``cfg``/``data=(xs, ys)``/``rt``
+    parameterize the same protocol over other workloads (benchmarks/scale.py
+    runs it at MNIST widths) so the baseline semantics live in ONE place.
+    Overriding ``cfg`` requires ``rt`` — the default runtime's s/T are
+    iris-calibrated and would silently miscalibrate another machine.
+    """
+    if cfg is not None and rt is None:
+        raise ValueError("pass rt= when overriding cfg= (default s/T are "
+                         "iris-calibrated)")
+    cfg = CFG if cfg is None else cfg
+    xs, ys = iris.load() if data is None else data
+    rt = init_runtime(cfg, s=3.0, T=15) if rt is None else rt
     seeds = list(range(K))
-    # per-replica offer streams: distinct row rotations of the iris set
+    # per-replica offer streams: distinct row rotations of the dataset
     rows = [np.roll(np.arange(len(xs)), -7 * r)[:cap] for r in range(K)]
     bufs = [_filled_buffer(xs[rows[r]], ys[rows[r]], cap) for r in range(K)]
     stacked = jax.tree.map(lambda *a: jnp.stack(a), *bufs)
@@ -59,14 +70,14 @@ def drain_bench(K: int = 8, cap: int = 64, chunk: int = 16,
     def make_sessions():
         out = []
         for r in range(K):
-            s = OnlineSession(CFG, init_state(CFG), rt, buffer_capacity=cap,
+            s = OnlineSession(cfg, init_state(cfg), rt, buffer_capacity=cap,
                               chunk=chunk, seed=seeds[r])
             s.ss = s.ss._replace(buf=bufs[r])
             out.append(s)
         return out
 
     def make_fleet():
-        f = OnlineFleet(CFG, init_state(CFG), rt, n_replicas=K,
+        f = OnlineFleet(cfg, init_state(cfg), rt, n_replicas=K,
                         buffer_capacity=cap, chunk=chunk, seed=seeds)
         f.ss = f.ss._replace(buf=stacked)
         return f

@@ -49,10 +49,21 @@ def _offer_point(cfg, ss, xs, ys, mask):
 
 
 def ingress_bench(K: int = 8, n_points: int = 256, block: int = 32,
-                  trials: int = 5) -> dict:
-    """offers/s: routed staging+flush vs per-point dispatch; bitwise check."""
-    xs, ys = iris.load()
-    rt = init_runtime(CFG, s=3.0, T=15)
+                  trials: int = 5, *, cfg=None, data=None, rt=None) -> dict:
+    """offers/s: routed staging+flush vs per-point dispatch; bitwise check.
+
+    Defaults measure the iris machine; ``cfg``/``data=(xs, ys)``/``rt``
+    parameterize the same protocol over other workloads (benchmarks/scale.py
+    runs it at MNIST widths) so the per-point baseline lives in ONE place.
+    Overriding ``cfg`` requires ``rt`` — the default runtime's s/T are
+    iris-calibrated and would silently miscalibrate another machine.
+    """
+    if cfg is not None and rt is None:
+        raise ValueError("pass rt= when overriding cfg= (default s/T are "
+                         "iris-calibrated)")
+    cfg = CFG if cfg is None else cfg
+    xs, ys = iris.load() if data is None else data
+    rt = init_runtime(cfg, s=3.0, T=15) if rt is None else rt
     # distinct per-replica streams (row rotations), n_points each
     rows = np.stack([np.roll(np.arange(len(xs)), -7 * r)[
         np.arange(n_points) % len(xs)] for r in range(K)])   # [K, n]
@@ -61,7 +72,7 @@ def ingress_bench(K: int = 8, n_points: int = 256, block: int = 32,
     full_mask = jnp.ones((K,), dtype=bool)
 
     def make_service():
-        return TMService(CFG, init_state(CFG), ServiceConfig(
+        return TMService(cfg, init_state(cfg), ServiceConfig(
             replicas=K, buffer_capacity=n_points, chunk=16,
             ingress_block=block, seed=list(range(K)),
         ), rt=rt)
@@ -75,7 +86,7 @@ def ingress_bench(K: int = 8, n_points: int = 256, block: int = 32,
     def run_per_point(svc):
         ss = svc.ss
         for i in range(n_points):
-            ss, _ = _offer_point(CFG, ss, jnp.asarray(feed_x[:, i]),
+            ss, _ = _offer_point(cfg, ss, jnp.asarray(feed_x[:, i]),
                                  jnp.asarray(feed_y[:, i]), full_mask)
         svc.ss = ss
         jax.block_until_ready(svc.ss.buf.data_x)

@@ -100,6 +100,30 @@ def make_sets(
     return OrderedSets(off_x, off_y, val_x, val_y, onl_x, onl_y)
 
 
+def paper_sets(
+    xs: np.ndarray,
+    ys: np.ndarray,
+    n_orderings: int,
+    seed: int = 2023,
+    spec: BlockSpec | None = None,
+) -> tuple[OrderedSets, BlockSpec]:
+    """The paper's block-CV recipe over an arbitrary booleanized dataset.
+
+    Default spec is the 1/2/2 split at ``block_len = n_rows // 5`` — the
+    iris geometry (30/60/60 at 150 rows) generalized so any dataset with
+    ``5 | n_rows`` rides the same cross-validation flows regardless of
+    feature width.
+    """
+    if spec is None:
+        n = xs.shape[0]
+        if n % 5:
+            raise ValueError(f"default 5-block spec needs 5 | n_rows, got {n}")
+        spec = BlockSpec(block_len=n // 5, offline_blocks=1,
+                         validation_blocks=2, online_blocks=2)
+    orderings = select_orderings(spec.n_blocks, n_orderings, seed=seed)
+    return make_sets(xs, ys, spec, orderings), spec
+
+
 def iris_paper_sets(
     n_orderings: int = 120, seed: int = 2023
 ) -> tuple[OrderedSets, BlockSpec]:
@@ -107,6 +131,21 @@ def iris_paper_sets(
     from repro.data import iris
 
     xs, ys = iris.load(seed=seed)
-    spec = BlockSpec(block_len=30, offline_blocks=1, validation_blocks=2, online_blocks=2)
-    orderings = select_orderings(spec.n_blocks, n_orderings, seed=seed)
-    return make_sets(xs, ys, spec, orderings), spec
+    return paper_sets(xs, ys, n_orderings, seed=seed)
+
+
+def mnist_paper_sets(
+    n_orderings: int = 120, seed: int = 2023, side: int | None = None
+) -> tuple[OrderedSets, BlockSpec]:
+    """The same 5-block CV recipe on the MNIST-scale digit workload.
+
+    150 generated rows (10 balanced classes) -> sets of 30/60/60 at
+    ``f = side**2`` boolean inputs — the wide-datapath twin of
+    :func:`iris_paper_sets`, so every sweep/system/serving flow accepts
+    it with zero host-side reshaping. ``side`` defaults to the full
+    28x28 raster; pass 14 or 7 for CPU-cheap runs.
+    """
+    from repro.data import mnist
+
+    xs, ys = mnist.load(seed=seed, side=mnist.SIDE if side is None else side)
+    return paper_sets(xs, ys, n_orderings, seed=seed)

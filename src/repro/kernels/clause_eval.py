@@ -15,9 +15,15 @@ Both sums come from ONE [CJ, L] x [L, 2] int8 matmul (rhs columns = ~literals
 and ones), so the whole clause plane rides the systolic array instead of the
 VPU, and the include bank streams HBM->VMEM exactly once per datapoint.
 
-The block grid tiles the flattened (class x clause) axis; the literal axis is
-kept whole per block (L is small: 2 x booleanized features — iris 32, MNIST
-1568 — far under VMEM limits at int8).
+The block grid tiles the flattened (class x clause) axis AND, at MNIST-scale
+widths, the literal axis: up to ``BLK_L`` literal lanes per block (iris
+L=32 pads to one 128-lane block; booleanized-MNIST L=1568 runs 4 blocks of
+512), with partial sums accumulated into the output block over the
+*innermost* grid dimension — the standard Pallas reduction pattern, so
+revisits of an output block are consecutive and VMEM residency per block
+stays bounded no matter how wide the datapath grows. Accumulation is int32
+(``preferred_element_type``): counts are <= L, so there is no headroom
+concern at any realistic width.
 """
 from __future__ import annotations
 
@@ -30,19 +36,38 @@ from jax.experimental import pallas as pl
 # int8-native TPU tile: 32 sublanes x 128 lanes.
 BLK_CJ = 32
 LANES = 128
+# Literal-axis block: 4 int8 tiles. Widths <= BLK_L keep the pre-tiling
+# single-block layout (one l-step); wider datapaths stream literal blocks.
+BLK_L = 512
 
 
-def _kernel(inc_ref, rhs_ref, out_ref):
-    # inc: [BLK_CJ, Lp] int8, rhs: [Lp, LANES] int8 -> out: [BLK_CJ, LANES] i32
-    out_ref[...] = jnp.dot(
+def _pad_l(L: int) -> tuple[int, int]:
+    """(padded literal width, literal block) for a datapath of width L."""
+    blk = min(BLK_L, -(-L // LANES) * LANES)
+    return -(-L // blk) * blk, blk
+
+
+def _kernel(l_axis: int, inc_ref, rhs_ref, out_ref):
+    # inc: [BLK_CJ, blk_l] int8, rhs: [blk_l, LANES] int8 -> accumulate
+    # [BLK_CJ, LANES] i32 partial sums over the innermost (literal) axis.
+    @pl.when(pl.program_id(l_axis) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
         inc_ref[...], rhs_ref[...], preferred_element_type=jnp.int32
     )
 
 
-def _kernel_replicated(inc_ref, rhs_ref, out_ref):
-    # Leading length-1 replica block: inc [1, BLK_CJ, Lp], rhs [1, Lp, LANES]
-    # -> out [1, BLK_CJ, LANES] i32 (shared by both replicated launches).
-    out_ref[...] = jnp.dot(
+def _kernel_replicated(l_axis: int, inc_ref, rhs_ref, out_ref):
+    # Leading length-1 replica block: inc [1, BLK_CJ, blk_l], rhs
+    # [1, blk_l, LANES] -> out [1, BLK_CJ, LANES] i32 (shared by both
+    # replicated launches), accumulated over the innermost literal axis.
+    @pl.when(pl.program_id(l_axis) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
         inc_ref[0], rhs_ref[0], preferred_element_type=jnp.int32
     )[None]
 
@@ -57,7 +82,7 @@ def clause_counts(
     """(violations [CJ] i32, n_included [CJ] i32) via one MXU matmul."""
     cj, L = include.shape
     cjp = -(-cj // BLK_CJ) * BLK_CJ
-    Lp = -(-L // LANES) * LANES
+    Lp, blk_l = _pad_l(L)
 
     inc = jnp.zeros((cjp, Lp), dtype=jnp.int8).at[:cj, :L].set(
         include.astype(jnp.int8)
@@ -68,13 +93,13 @@ def clause_counts(
     rhs = rhs.at[:L, 1].set(1)
 
     out = pl.pallas_call(
-        _kernel,
-        grid=(cjp // BLK_CJ,),
+        functools.partial(_kernel, 1),
+        grid=(cjp // BLK_CJ, Lp // blk_l),
         in_specs=[
-            pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
-            pl.BlockSpec((Lp, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((BLK_CJ, blk_l), lambda i, l: (i, l)),
+            pl.BlockSpec((blk_l, LANES), lambda i, l: (l, 0)),
         ],
-        out_specs=pl.BlockSpec((BLK_CJ, LANES), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((BLK_CJ, LANES), lambda i, l: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((cjp, LANES), jnp.int32),
         interpret=interpret,
     )(inc, rhs)
@@ -112,13 +137,14 @@ def clause_counts_batch(
     ``~literal_b`` (per-datapoint violation counters) and column B carries
     ones (the include counter — datapoint-independent, so a single column
     refines the [L, 2B] design down to [L, B+1]). The include bank streams
-    HBM->VMEM once per *batch*; the grid tiles both the flattened
-    (class x clause) axis and the datapoint-column axis.
+    HBM->VMEM once per *batch*; the grid tiles the flattened
+    (class x clause) axis, the datapoint-column axis and the literal axis
+    (innermost, accumulated).
     """
     cj, L = include.shape
     B = literals.shape[0]
     cjp = -(-cj // BLK_CJ) * BLK_CJ
-    Lp = -(-L // LANES) * LANES
+    Lp, blk_l = _pad_l(L)
     cols = B + 1
     colsp = -(-cols // LANES) * LANES
 
@@ -130,13 +156,13 @@ def clause_counts_batch(
     rhs = rhs.at[:L, B].set(1)
 
     out = pl.pallas_call(
-        _kernel,
-        grid=(cjp // BLK_CJ, colsp // LANES),
+        functools.partial(_kernel, 2),
+        grid=(cjp // BLK_CJ, colsp // LANES, Lp // blk_l),
         in_specs=[
-            pl.BlockSpec((BLK_CJ, Lp), lambda i, j: (i, 0)),
-            pl.BlockSpec((Lp, LANES), lambda i, j: (0, j)),
+            pl.BlockSpec((BLK_CJ, blk_l), lambda i, j, l: (i, l)),
+            pl.BlockSpec((blk_l, LANES), lambda i, j, l: (l, j)),
         ],
-        out_specs=pl.BlockSpec((BLK_CJ, LANES), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((BLK_CJ, LANES), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((cjp, colsp), jnp.int32),
         interpret=interpret,
     )(inc, rhs)
@@ -170,18 +196,18 @@ def clause_counts_replicated(
 ) -> tuple[jax.Array, jax.Array]:
     """(violations [R, CJ] i32, n_included [R, CJ] i32) in ONE kernel launch.
 
-    Replica-first form of :func:`clause_counts`: a 2-D grid over
-    (replica, clause-block), each replica contracting its own include bank
-    against its data stream's literal row. The rhs BlockSpec maps replica
-    ``r`` to literal row ``r % D``, so a hyperparameter grid sharing one
-    ordering's data stream stores the rhs once per ordering.
+    Replica-first form of :func:`clause_counts`: a grid over
+    (replica, clause-block, literal-block), each replica contracting its own
+    include bank against its data stream's literal row. The rhs BlockSpec
+    maps replica ``r`` to literal row ``r % D``, so a hyperparameter grid
+    sharing one ordering's data stream stores the rhs once per ordering.
     """
     R, cj, L = include.shape
     D = literals.shape[0]
     if R % D:
         raise ValueError(f"data replicas {D} must divide replicas {R}")
     cjp = -(-cj // BLK_CJ) * BLK_CJ
-    Lp = -(-L // LANES) * LANES
+    Lp, blk_l = _pad_l(L)
 
     inc = jnp.zeros((R, cjp, Lp), dtype=jnp.int8).at[:, :cj, :L].set(
         include.astype(jnp.int8)
@@ -191,13 +217,13 @@ def clause_counts_replicated(
     rhs = rhs.at[:, :L, 1].set(1)
 
     out = pl.pallas_call(
-        _kernel_replicated,
-        grid=(R, cjp // BLK_CJ),
+        functools.partial(_kernel_replicated, 2),
+        grid=(R, cjp // BLK_CJ, Lp // blk_l),
         in_specs=[
-            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r, i, 0)),
-            pl.BlockSpec((1, Lp, LANES), lambda r, i: (r % D, 0, 0)),
+            pl.BlockSpec((1, BLK_CJ, blk_l), lambda r, i, l: (r, i, l)),
+            pl.BlockSpec((1, blk_l, LANES), lambda r, i, l: (r % D, l, 0)),
         ],
-        out_specs=pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i: (r, i, 0)),
+        out_specs=pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i, l: (r, i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, cjp, LANES), jnp.int32),
         interpret=interpret,
     )(inc, rhs)
@@ -231,22 +257,23 @@ def clause_counts_batch_replicated(
 ) -> tuple[jax.Array, jax.Array]:
     """(violations [R, CJ, B] i32, n_included [R, CJ] i32) in ONE launch.
 
-    The replica-first form of :func:`clause_counts_batch`: a 3-D grid over
-    (replica, clause-block, column-block), each replica contracting its own
-    include bank against its data stream's [L, B+1] rhs. The rhs BlockSpec
-    maps replica ``r`` to stream ``r % D`` — the factored layout rule — so
-    a hyperparameter grid sharing one ordering's batch stores the rhs once
-    per ordering instead of gathering an R/D-fold tiled copy (the
-    take+vmap formulation this replaced). This is the kernel under both the
-    fused multi-set analysis pass (``accuracy.analyze_sets_replicated``)
-    and the fleet serving ``infer`` path (``tm.predict_batch_replicated``).
+    The replica-first form of :func:`clause_counts_batch`: a 4-D grid over
+    (replica, clause-block, column-block, literal-block), each replica
+    contracting its own include bank against its data stream's [L, B+1]
+    rhs. The rhs BlockSpec maps replica ``r`` to stream ``r % D`` — the
+    factored layout rule — so a hyperparameter grid sharing one ordering's
+    batch stores the rhs once per ordering instead of gathering an R/D-fold
+    tiled copy (the take+vmap formulation this replaced). This is the
+    kernel under both the fused multi-set analysis pass
+    (``accuracy.analyze_sets_replicated``) and the fleet serving ``infer``
+    path (``tm.predict_batch_replicated``).
     """
     R, cj, L = include.shape
     D, B, _ = literals.shape
     if R % D:
         raise ValueError(f"data replicas {D} must divide replicas {R}")
     cjp = -(-cj // BLK_CJ) * BLK_CJ
-    Lp = -(-L // LANES) * LANES
+    Lp, blk_l = _pad_l(L)
     cols = B + 1
     colsp = -(-cols // LANES) * LANES
 
@@ -260,13 +287,15 @@ def clause_counts_batch_replicated(
     rhs = rhs.at[:, :L, B].set(1)
 
     out = pl.pallas_call(
-        _kernel_replicated,
-        grid=(R, cjp // BLK_CJ, colsp // LANES),
+        functools.partial(_kernel_replicated, 3),
+        grid=(R, cjp // BLK_CJ, colsp // LANES, Lp // blk_l),
         in_specs=[
-            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i, j: (r, i, 0)),
-            pl.BlockSpec((1, Lp, LANES), lambda r, i, j: (r % D, 0, j)),
+            pl.BlockSpec((1, BLK_CJ, blk_l), lambda r, i, j, l: (r, i, l)),
+            pl.BlockSpec((1, blk_l, LANES), lambda r, i, j, l: (r % D, l, j)),
         ],
-        out_specs=pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i, j: (r, i, j)),
+        out_specs=pl.BlockSpec(
+            (1, BLK_CJ, LANES), lambda r, i, j, l: (r, i, j)
+        ),
         out_shape=jax.ShapeDtypeStruct((R, cjp, colsp), jnp.int32),
         interpret=interpret,
     )(inc, rhs)
@@ -283,11 +312,11 @@ def clause_eval_batch_replicated(
     """Kernel-backed replica-first batch clause outputs [R, B, C, J] bool.
 
     One launch of :func:`clause_counts_batch_replicated` — the whole
-    analysis / serving-inference plane of R machines rides a single 3-D
-    kernel grid with the ``r % D`` rhs index map doing the data-stream
-    factoring (previously a per-replica gather + vmap of
-    :func:`clause_eval_batch`). Bit-identical to stacking
-    ``clause_eval_batch(include[r], literals[r % D])`` per replica.
+    analysis / serving-inference plane of R machines rides a single kernel
+    grid with the ``r % D`` rhs index map doing the data-stream factoring
+    (previously a per-replica gather + vmap of :func:`clause_eval_batch`).
+    Bit-identical to stacking ``clause_eval_batch(include[r],
+    literals[r % D])`` per replica.
     """
     R, C, J, L = include.shape
     B = literals.shape[1]

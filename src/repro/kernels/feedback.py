@@ -10,6 +10,12 @@ control (clause output, Type I/II selection) is packed into the first three
 columns of a [CJ, LANES] int8 control block so every operand block is
 TPU-tile aligned; probabilities ride a [1, LANES] f32 vector (col 0 =
 p_strengthen, col 1 = p_erase) and broadcast inside the kernel.
+
+At MNIST-scale widths the literal axis is tiled too (``BLK_L`` lanes per
+block, the same scheme as ``clause_eval.py``): the update is elementwise
+along literals, so literal blocks are independent grid steps — no
+accumulation — and the f32 uniforms block (the widest operand) stays
+bounded in VMEM regardless of datapath width.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.clause_eval import _pad_l
 
 BLK_CJ = 32
 LANES = 128
@@ -96,7 +104,7 @@ def feedback_plane(
     """Fused TA update over the flattened plane. Returns new ta_state [CJ, L]."""
     cj, L = ta_state.shape
     cjp = -(-cj // BLK_CJ) * BLK_CJ
-    Lp = -(-L // LANES) * LANES
+    Lp, blk_l = _pad_l(L)
     dt = ta_state.dtype
 
     ta = jnp.ones((cjp, Lp), dtype=dt).at[:cj, :L].set(ta_state)
@@ -116,15 +124,15 @@ def feedback_plane(
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_states),
-        grid=(cjp // BLK_CJ,),
+        grid=(cjp // BLK_CJ, Lp // blk_l),
         in_specs=[
-            pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
-            pl.BlockSpec((1, Lp), lambda i: (0, 0)),
-            pl.BlockSpec((BLK_CJ, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
-            pl.BlockSpec((1, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((BLK_CJ, blk_l), lambda i, l: (i, l)),
+            pl.BlockSpec((1, blk_l), lambda i, l: (0, l)),
+            pl.BlockSpec((BLK_CJ, LANES), lambda i, l: (i, 0)),
+            pl.BlockSpec((BLK_CJ, blk_l), lambda i, l: (i, l)),
+            pl.BlockSpec((1, LANES), lambda i, l: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((BLK_CJ, Lp), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((BLK_CJ, blk_l), lambda i, l: (i, l)),
         out_shape=jax.ShapeDtypeStruct((cjp, Lp), dt),
         interpret=interpret,
     )(ta, lit, ctl, up, p)
@@ -165,7 +173,7 @@ def feedback_plane_replicated(
     if R % D:
         raise ValueError(f"data replicas {D} must divide replicas {R}")
     cjp = -(-cj // BLK_CJ) * BLK_CJ
-    Lp = -(-L // LANES) * LANES
+    Lp, blk_l = _pad_l(L)
     dt = ta_state.dtype
 
     ta = jnp.ones((R, cjp, Lp), dtype=dt).at[:, :cj, :L].set(ta_state)
@@ -186,15 +194,15 @@ def feedback_plane_replicated(
 
     out = pl.pallas_call(
         functools.partial(_kernel_replicated, n_states),
-        grid=(R, cjp // BLK_CJ),
+        grid=(R, cjp // BLK_CJ, Lp // blk_l),
         in_specs=[
-            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r, i, 0)),
-            pl.BlockSpec((1, 1, Lp), lambda r, i: (r % D, 0, 0)),
-            pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i: (r, i, 0)),
-            pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r % D, i, 0)),
-            pl.BlockSpec((1, 1, LANES), lambda r, i: (r, 0, 0)),
+            pl.BlockSpec((1, BLK_CJ, blk_l), lambda r, i, l: (r, i, l)),
+            pl.BlockSpec((1, 1, blk_l), lambda r, i, l: (r % D, 0, l)),
+            pl.BlockSpec((1, BLK_CJ, LANES), lambda r, i, l: (r, i, 0)),
+            pl.BlockSpec((1, BLK_CJ, blk_l), lambda r, i, l: (r % D, i, l)),
+            pl.BlockSpec((1, 1, LANES), lambda r, i, l: (r, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, BLK_CJ, Lp), lambda r, i: (r, i, 0)),
+        out_specs=pl.BlockSpec((1, BLK_CJ, blk_l), lambda r, i, l: (r, i, l)),
         out_shape=jax.ShapeDtypeStruct((R, cjp, Lp), dt),
         interpret=interpret,
     )(ta, lit, ctl, up, p)

@@ -1,10 +1,15 @@
-"""Data subsystems: iris booleanization, block CV, filter, ring buffer."""
+"""Data subsystems: iris booleanization, block CV, filter, ring buffer,
+and the MNIST-scale procedural digit generator."""
+import hashlib
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data import blocks, buffer, filter as filt, iris, memory
+from repro.data import blocks, buffer, filter as filt, iris, memory, mnist
 
 
 def test_iris_shape_and_balance():
@@ -83,6 +88,109 @@ def test_ring_buffer_wraparound():
         buf, x, y, valid = buffer.pop(buf)
         assert bool(valid) and int(y) == 10 + round_
     assert int(buf.size) == 0
+
+
+def test_mnist_shapes_and_class_balance():
+    """Every class appears exactly n/10 times when 10 | n, at every side."""
+    for side in (28, 14, 7):
+        xs, ys = mnist.load(n_points=60, side=side)
+        assert xs.shape == (60, side * side) and xs.dtype == bool
+        assert ys.dtype == np.int32
+        assert list(np.bincount(ys, minlength=10)) == [6] * 10
+    # uneven n: counts differ by at most one
+    ys = mnist.labels(47, seed=3)
+    counts = np.bincount(ys, minlength=10)
+    assert counts.max() - counts.min() <= 1 and counts.sum() == 47
+
+
+def test_mnist_deterministic_across_processes():
+    """Same seed => bitwise-same splits, even in a fresh interpreter (the
+    generator draws from SeedSequence([seed, i]), never global RNG state)."""
+    tr_x, tr_y, te_x, te_y = mnist.splits(20, 10, seed=7, side=7)
+    digest = hashlib.sha256(
+        b"".join(np.ascontiguousarray(a).tobytes()
+                 for a in (tr_x, tr_y, te_x, te_y))
+    ).hexdigest()
+    child = subprocess.run(
+        [sys.executable, "-c", (
+            "import hashlib, numpy as np\n"
+            "from repro.data import mnist\n"
+            "parts = mnist.splits(20, 10, seed=7, side=7)\n"
+            "print(hashlib.sha256(b''.join("
+            "np.ascontiguousarray(a).tobytes() for a in parts)).hexdigest())"
+        )],
+        capture_output=True, text=True, check=True,
+    )
+    assert child.stdout.strip() == digest
+
+
+def test_mnist_splits_are_prefix_stable():
+    """Growing the test split never perturbs the train rows (one
+    generation, sliced)."""
+    a = mnist.splits(20, 5, seed=1, side=7)
+    b = mnist.splits(20, 15, seed=1, side=7)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    np.testing.assert_array_equal(a[2], b[2][:5])
+
+
+def test_mnist_booleanize_threshold_edge():
+    """Booleanization is inclusive: a pixel exactly at the threshold is
+    ink; one ulp below is background."""
+    thr = mnist.THRESHOLD
+    below = np.nextafter(np.float32(thr), np.float32(0.0))
+    imgs = np.asarray([[[thr, below], [0.0, 1.0]]], dtype=np.float32)
+    bits = mnist.booleanize(imgs)
+    np.testing.assert_array_equal(bits, [[True, False, False, True]])
+
+
+def test_mnist_downscale_blocks():
+    """Block-mean pooling halves the raster and averages exact 2x2 blocks."""
+    imgs = np.arange(16, dtype=np.float32).reshape(1, 4, 4)
+    got = mnist.downscale(imgs, 2)
+    np.testing.assert_allclose(
+        got, [[[2.5, 4.5], [10.5, 12.5]]]
+    )
+    with pytest.raises(ValueError):
+        mnist.downscale(np.zeros((1, 7, 7), dtype=np.float32), 2)
+
+
+def test_mnist_glyphs_separable_at_low_res():
+    """Different digits produce different booleanized rasters even at 7x7
+    (jitter never collapses two classes onto one bitmap)."""
+    xs, ys = mnist.load(n_points=40, side=7)
+    for a in range(40):
+        for b in range(a + 1, 40):
+            if ys[a] != ys[b]:
+                assert not np.array_equal(xs[a], xs[b])
+
+
+def test_mnist_downscale_preserves_label_assignment():
+    """Hypothesis property: the 28 -> 14 -> 7 downscale chain is a pure
+    datapath-width change — the label sequence depends only on (n, seed),
+    and block-pooling a 28x28 raster twice matches the 7x7 geometry."""
+    hyp = pytest.importorskip(
+        "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(10, 30), seed=st.integers(0, 2**16 - 1))
+    def prop(n, seed):
+        ys28 = mnist.load(n_points=n, seed=seed, side=28)[1]
+        ys14 = mnist.load(n_points=n, seed=seed, side=14)[1]
+        ys7 = mnist.load(n_points=n, seed=seed, side=7)[1]
+        np.testing.assert_array_equal(ys28, ys14)
+        np.testing.assert_array_equal(ys14, ys7)
+        imgs28, ys = mnist.raw(n, seed=seed, side=28)
+        pooled7 = mnist.downscale(mnist.downscale(imgs28, 2), 2)
+        assert pooled7.shape == (n, 7, 7)
+        np.testing.assert_array_equal(ys, ys28)
+        # pooled ink stays ink-like: every digit keeps some over-threshold
+        # mass after two halvings
+        assert (pooled7.reshape(n, -1) >= mnist.THRESHOLD).any(axis=1).all()
+
+    prop()
 
 
 def test_rom_source_cycles():

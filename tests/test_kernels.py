@@ -15,6 +15,8 @@ SHAPES = [
     (2, 6, 17),     # non-aligned everything
     (10, 100, 200), # MNIST-ish TM
     (4, 33, 129),   # one over tile boundaries
+    (2, 6, 513),    # one over the BLK_L literal-block boundary — exercises
+                    # the multi-block accumulation path in tier-1
 ]
 
 
@@ -91,6 +93,7 @@ REP_SHAPES = [
     (6, 3, 3, 16, 32),     # the iris machine, 2x3 grid-over-orderings
     (5, 5, 2, 7, 33),      # replicas == data streams (system path), odd L
     (4, 2, 4, 33, 129),    # one over both tile boundaries
+    (4, 2, 2, 6, 513),     # one over the BLK_L literal-block boundary
 ]
 
 

@@ -1,0 +1,174 @@
+"""Wide-datapath (MNIST-scale) suite: parity and end-to-end serving.
+
+Everything else in tests/ runs at iris width (f=16); this file pins the
+scale path: the generated booleanized digit workload at 14x14 (f=196,
+tier-1) and the full 28x28 (f=784, ``-m slow``) through
+
+* the sweep engine, asserted bitwise ref <-> pallas per cell,
+* TMService end to end — submit -> tick -> serve, including a §5.3.2
+  rollback — on both kernel backends, with rows flowing straight from the
+  generator into the service (no host-side reshaping anywhere), and the
+  two backends' tick trajectories asserted bitwise identical.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tm_mnist
+from repro.core import init_state
+from repro.core.tm import TMState
+from repro.data import mnist
+from repro.eval.crossval import CrossValRun
+from repro.serve import AdaptPolicy, ServiceConfig, TMService
+
+FAST_SIDE = 14
+SLOW_SIDE = 28
+
+
+def _cfg(side, backend="ref"):
+    params = tm_mnist.config_for_side(side)
+    return dataclasses.replace(params.tm, backend=backend), params
+
+
+# ---------------------------------------------------------------------------
+# sweep-cell parity: ref <-> pallas, bitwise, at width
+# ---------------------------------------------------------------------------
+
+
+def _sweep_cell(side, backend, n_orderings=2, n_epochs=1):
+    from repro.data import blocks
+
+    cfg, params = _cfg(side, backend)
+    xs, ys = mnist.load(side=side)
+    osets, _ = blocks.paper_sets(xs, ys, n_orderings)
+    res = CrossValRun(cfg).sweep(
+        jnp.asarray(osets.offline_x), jnp.asarray(osets.offline_y),
+        jnp.asarray(osets.validation_x), jnp.asarray(osets.validation_y),
+        (params.s_offline,), (params.T,), n_epochs=n_epochs, seed=0,
+    )
+    return np.asarray(res.val_accuracy)
+
+
+def test_sweep_cell_ref_pallas_bitwise_fast():
+    """f=196: one sweep cell per ordering, identical across backends."""
+    a = _sweep_cell(FAST_SIDE, "ref")
+    b = _sweep_cell(FAST_SIDE, "pallas")
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (1, 1, 2)
+
+
+@pytest.mark.slow
+def test_sweep_cell_ref_pallas_bitwise_full_width():
+    """f=784: the full MNIST-width sweep cell, identical across backends."""
+    a = _sweep_cell(SLOW_SIDE, "ref")
+    b = _sweep_cell(SLOW_SIDE, "pallas")
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# TMService end to end at width: submit -> tick -> serve (+ §5.3.2 rollback)
+# ---------------------------------------------------------------------------
+
+
+def _service(side, backend, K=2):
+    cfg, params = _cfg(side, backend)
+    tr_x, tr_y, te_x, te_y = mnist.splits(60, 40, seed=5, side=side)
+    svc = TMService(
+        cfg, init_state(cfg),
+        ServiceConfig(replicas=K, buffer_capacity=32, chunk=8,
+                      s=params.s_online, T=params.T, seed=[3, 4][:K],
+                      policy=AdaptPolicy(analyze_every=8,
+                                         rollback_threshold=0.1)),
+        eval_x=te_x, eval_y=te_y,
+    )
+    return svc, (tr_x, tr_y, te_x, te_y)
+
+
+def _drive(svc, tr_x, tr_y, n=16):
+    """Identical labelled traffic through submit -> tick; returns reports."""
+    reports = []
+    for i in range(n):
+        svc.submit_rows(tr_x[i % len(tr_x)], int(tr_y[i % len(tr_y)]))
+        if (i + 1) % svc.chunk == 0:
+            reports.append(svc.tick())
+    return reports
+
+
+def _e2e_rollback(side, backend):
+    svc, (tr_x, tr_y, te_x, te_y) = _service(side, backend)
+    base = svc.offline_train(tr_x, tr_y, n_epochs=4)
+    assert base.shape == (2,)
+    assert float(base.min()) > 0.3          # learnt something at width
+
+    # Poison member 0's bank; member 1 keeps serving untouched (§5.3.2
+    # isolation). The next due analysis must roll member 0 back.
+    cfg = svc.cfg
+    poisoned = np.asarray(svc.ss.tm.ta_state).copy()
+    poisoned[0] = np.asarray(init_state(cfg).ta_state)
+    svc.ss = svc.ss._replace(tm=TMState(ta_state=jnp.asarray(poisoned)))
+
+    reports = _drive(svc, tr_x, tr_y, n=16)
+    fired = [r for r in reports if r.accuracy is not None]
+    assert fired, "no analysis became due"
+    assert svc.rollbacks.tolist() == [1, 0]
+    assert any(r.rolled_back.tolist() == [True, False] for r in fired)
+
+    # serve: fleet inference straight off the generator's rows.
+    preds = svc.serve(te_x)
+    assert preds.shape == (2, len(te_x))
+    acc_served = (preds[1] == np.asarray(te_y)).mean()
+    assert float(acc_served) >= float(base[1]) - 0.15
+    # rolled-back member recovered to its known-good neighborhood
+    assert float(svc.analyze()[0]) >= float(base[0]) - 0.1
+    return svc
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_service_end_to_end_rollback_fast(backend):
+    """f=196 submit -> tick -> serve with a §5.3.2 rollback, per backend."""
+    _e2e_rollback(FAST_SIDE, backend)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_service_end_to_end_rollback_full_width(backend):
+    """f=784: the same end-to-end flow at the full MNIST width."""
+    _e2e_rollback(SLOW_SIDE, backend)
+
+
+def _tick_trajectory(side, backend):
+    svc, (tr_x, tr_y, _, _) = _service(side, backend)
+    svc.offline_train(tr_x[:20], tr_y[:20], n_epochs=2)
+    reports = _drive(svc, tr_x, tr_y, n=16)
+    return svc, reports
+
+
+def _assert_tick_parity(side):
+    ref_svc, ref_rep = _tick_trajectory(side, "ref")
+    pal_svc, pal_rep = _tick_trajectory(side, "pallas")
+    np.testing.assert_array_equal(
+        np.asarray(ref_svc.ss.tm.ta_state),
+        np.asarray(pal_svc.ss.tm.ta_state),
+    )
+    np.testing.assert_array_equal(ref_svc.steps, pal_svc.steps)
+    assert len(ref_rep) == len(pal_rep)
+    for a, b in zip(ref_rep, pal_rep):
+        np.testing.assert_array_equal(a.trained, b.trained)
+        if a.accuracy is None:
+            assert b.accuracy is None
+        else:
+            np.testing.assert_array_equal(a.accuracy, b.accuracy)
+
+
+def test_service_tick_ref_pallas_bitwise_fast():
+    """f=196: whole tick trajectories bitwise identical across backends."""
+    _assert_tick_parity(FAST_SIDE)
+
+
+@pytest.mark.slow
+def test_service_tick_ref_pallas_bitwise_full_width():
+    """f=784: whole tick trajectories bitwise identical across backends."""
+    _assert_tick_parity(SLOW_SIDE)
