@@ -25,6 +25,13 @@ replica-parallel paths must *widen* their advantage as f grows —
   bitwise-asserted; the protocols are ``benchmarks.fleet.drain_bench``
   and ``benchmarks.ingress.ingress_bench`` parameterized over width) —
   the ROADMAP "wire serving + ingress to a bigger workload" item.
+* ``scale_packed_infer_f*`` — the §13 bit-packed datapath vs the boolean
+  one: batched inference on uint32 word rows (AND+popcount kernels)
+  against the same pass on bool rows, per backend, bitwise-equal
+  predictions asserted. Reports the bandwidth story alongside the wall
+  clock: bytes per stored row and the ring-buffer / ingress-staging
+  footprints at the fleet-bench serving geometry. Gated in-script AND
+  in CI: packed must be >= 2x unpacked at f=784 on the pallas backend.
 * ``scale_parity_f*`` — one sweep cell (offline epochs + analysis) and
   one batched inference pass run under BOTH kernel backends (ref and
   pallas-interpret), asserted bitwise identical at every width.
@@ -111,6 +118,67 @@ def batch_infer_bench(side: int, trials: int = 5) -> dict:
     }
 
 
+def packed_infer_bench(side: int, trials: int = 5, K: int = 4,
+                       cap: int = 32, block: int = 32) -> dict:
+    """Packed (AND+popcount, §13) vs boolean batch inference per backend.
+
+    Both paths enter through the same ``predict_batch`` — the uint32 dtype
+    routes rows to the packed kernels — so this measures exactly what a
+    ``ServiceConfig(packed=True)`` service runs in steady state: inference
+    straight off word-packed rows, no unpack. The headline is the pallas
+    backend, where packing shrinks the word grid ~32x; the ref backend's
+    ratio is reported too (its unpacked path is already a dense int GEMM,
+    so popcount is not expected to win there at width). K/cap/block pin
+    the fleet-bench serving geometry for the memory-footprint rows.
+    """
+    from repro.kernels import packing
+
+    _, params, xs, ys = _width(side)
+    f = params.tm.n_features
+    xs_j = jnp.asarray(xs)
+    xp = packing.pack_bits(xs_j)
+
+    row: dict = {"f": f, "batch": len(xs)}
+    for backend in ("pallas", "ref"):
+        cfg = dataclasses.replace(params.tm, backend=backend)
+        rt = init_runtime(cfg, s=params.s_offline, T=params.T)
+        st = init_state(cfg, jax.random.PRNGKey(0))
+        infer = jax.jit(lambda s, x: tm_mod.predict_batch(cfg, s, rt, x))
+        # Interleave trials so background host load skews both paths
+        # equally (same protocol as batch_infer_bench).
+        dt_u, dt_p = float("inf"), float("inf")
+        preds_u = preds_p = None
+        for _ in range(trials):
+            t, preds_u = _min_time(lambda: infer(st, xs_j), trials=1)
+            dt_u = min(dt_u, t)
+            t, preds_p = _min_time(lambda: infer(st, xp), trials=1)
+            dt_p = min(dt_p, t)
+        if not np.array_equal(np.asarray(preds_u), np.asarray(preds_p)):
+            raise AssertionError(
+                f"packed and unpacked inference diverge at f={f} "
+                f"on the {backend} backend"
+            )
+        row[f"wall_s_unpacked_{backend}"] = dt_u
+        row[f"wall_s_packed_{backend}"] = dt_p
+        row[f"speedup_{backend}"] = dt_u / dt_p
+
+    bpp_unpacked = f                            # bool row: 1 byte/literal
+    bpp_packed = packing.packed_row_bytes(f)    # 4 * ceil(f/32)
+    row.update({
+        "speedup": row["speedup_pallas"],       # the gated headline
+        "datapoints_per_s": len(xs) / row["wall_s_packed_pallas"],
+        "bytes_per_point_unpacked": bpp_unpacked,
+        "bytes_per_point_packed": bpp_packed,
+        "bandwidth_reduction": bpp_unpacked / bpp_packed,
+        "buffer_bytes_unpacked": K * cap * bpp_unpacked,
+        "buffer_bytes_packed": K * cap * bpp_packed,
+        "staging_bytes_unpacked": K * block * bpp_unpacked,
+        "staging_bytes_packed": K * block * bpp_packed,
+        "bitwise_identical": True,
+    })
+    return row
+
+
 def sweep_bench(side: int) -> dict:
     cfg, params, xs, ys = _width(side)
     osets, _ = blocks.paper_sets(xs, ys, N_ORDERINGS)
@@ -182,6 +250,7 @@ def main():
         f = side * side
         for metric, fn in (
             ("scale_batch_infer", batch_infer_bench),
+            ("scale_packed_infer", packed_infer_bench),
             ("scale_sweep", sweep_bench),
             ("scale_fleet_drain", fleet_drain_bench),
             ("scale_ingress", ingress_bench),
@@ -192,8 +261,8 @@ def main():
             name = f"{metric}_f{f}"
             us = next(
                 (row[k] * 1e6 for k in
-                 ("wall_s_batch", "wall_s_engine", "wall_s_fleet",
-                  "wall_s_routed") if k in row), 0.0,
+                 ("wall_s_batch", "wall_s_packed_pallas", "wall_s_engine",
+                  "wall_s_fleet", "wall_s_routed") if k in row), 0.0,
             )
             derived = ";".join(
                 f"{k}={row[k]:.3g}" if isinstance(row[k], float)
@@ -214,6 +283,22 @@ def main():
                 f"{lo:.2f}x — the scale path narrowed its advantage"
             )
         print(f"# {metric}: f16 {lo:.2f}x -> f784 {hi:.2f}x (widened)")
+
+    # The §13 packed-datapath gate (the CI gate re-checks this over the
+    # JSON artifact): at full MNIST width the AND+popcount kernels must
+    # beat the boolean path by >= 2x on the pallas backend.
+    pk = by_metric["scale_packed_infer"][784]
+    if pk["speedup_pallas"] < 2.0:
+        raise AssertionError(
+            f"scale_packed_infer: f=784 pallas packed speedup "
+            f"{pk['speedup_pallas']:.2f}x < 2x — the packed datapath "
+            f"lost its word-grid advantage"
+        )
+    print(
+        f"# scale_packed_infer: f784 pallas packed "
+        f"{pk['speedup_pallas']:.2f}x unpacked (gate >= 2x), "
+        f"{pk['bandwidth_reduction']:.1f}x fewer bytes/point"
+    )
 
     out_path = os.environ.get("REPRO_BENCH_SCALE_JSON", "BENCH_scale.json")
     payload = {

@@ -31,6 +31,10 @@ def analyze(
     ``clause_eval_batch`` (include bank read once), not a vmap of per-sample
     predictions — this runs thrice per online cycle in the manager, so it is
     the hottest inference path in the system.
+
+    ``xs`` may be PACKED rows [n, ceil(f/32)] uint32 (DESIGN.md §13) — the
+    core's dtype routing sends them to the AND+popcount kernels with
+    bit-identical predictions, so packed services analyze packed.
     """
     preds = tm_mod.predict_batch_(cfg, state, rt, xs)
     ok = (preds == ys).astype(jnp.float32)
@@ -54,7 +58,8 @@ def analyze_replicated(
     sweep's analysis pass is ONE dispatched ``clause_eval_batch_replicated``
     contraction. Replica ``r`` reproduces ``analyze`` on set ``r % D``
     bit-for-bit (violation counts are integer-exact in f32; the per-replica
-    mean reduces over the same m values in the same order).
+    mean reduces over the same m values in the same order). Packed ``xs``
+    ([D, m, W] uint32, §13) route to the packed replicated kernel.
     """
     preds = tm_mod.predict_batch_replicated_(cfg, state, rt, xs)  # [R, m]
     return _reduce_replicated(preds, ys, valid)

@@ -70,6 +70,34 @@ def random_stuck_at(
     return and_mask.reshape(shape), or_mask.reshape(shape)
 
 
+def packed_masks(cfg: TMConfig, rt: TMRuntime) -> tuple[jax.Array, jax.Array]:
+    """The runtime's fault mappings, packed to the §13 literal-word layout.
+
+    The fault controller is a bitwise circuit, so it commutes with packing:
+
+        pack((include & and) | or) == (pack(include) & pack(and)) | pack(or)
+
+    (both sides have zero tail bits — packing zero-fills, AND keeps zeros,
+    and the OR mask's packed tail is zero). A packed datapath can therefore
+    apply stuck-at faults directly on include words; the regression test in
+    tests/test_packing.py pins this homomorphism against the pre-pack
+    application used by ``tm.ta_actions_packed``.
+    """
+    from repro.kernels import packing
+
+    return (
+        packing.pack_include(rt.ta_and_mask, cfg.n_features),
+        packing.pack_include(rt.ta_or_mask, cfg.n_features),
+    )
+
+
+def apply_packed(
+    include_packed: jax.Array, and_packed: jax.Array, or_packed: jax.Array
+) -> jax.Array:
+    """Packed-domain fault controller: action' words from action words."""
+    return (include_packed & and_packed) | or_packed
+
+
 def inject(rt: TMRuntime, and_mask, or_mask) -> TMRuntime:
     """Write new fault mappings into the runtime (microcontroller write)."""
     return rt._replace(

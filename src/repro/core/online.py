@@ -20,6 +20,7 @@ from repro.core import tm as tm_mod
 from repro.core.tm import TMConfig, TMRuntime, TMState
 from repro.data import buffer as buf_mod
 from repro.data.memory import DataSource
+from repro.kernels import packing
 
 
 class SessionState(NamedTuple):
@@ -86,9 +87,16 @@ def _consume_many_replicated(
     with ``(ss[r], limit[r], keys[r])`` — the replicated kernels' stacking
     guarantee plus per-replica RNG streams (split per chunk key exactly as
     the single-machine path splits its one key).
+
+    PACKED buffers (uint32 rows, DESIGN.md §13) are transparent here: each
+    popped row unpacks once for the elementwise TA feedback (pack/unpack is
+    exact, so the trained states are bit-identical to the unpacked path)
+    while the hoisted monitoring pass consumes the packed rows directly —
+    ``predict_batch_replicated_`` routes them to the AND+popcount kernels.
     """
     R = ss.step.shape[0]
     limit = jnp.asarray(limit, dtype=jnp.int32)
+    packed = ss.buf.data_x.dtype == jnp.uint32          # static at trace time
 
     step_keys = jax.vmap(lambda kk: jax.random.split(kk, k))(keys)
     step_keys = jnp.swapaxes(step_keys, 0, 1)           # [k, R, key]
@@ -98,8 +106,9 @@ def _consume_many_replicated(
         i, kk = inp                                     # scalar i32, [R] keys
         new_buf, x, y, nonempty = jax.vmap(buf_mod.pop)(buf)
         valid = (i < limit) & nonempty                  # [R]
+        xb = packing.unpack_bits(x, cfg.n_features) if packed else x
         new_tm, _, activity = fb_mod.train_update_replicated(
-            cfg, tm, rt, x, y, kk
+            cfg, tm, rt, xb, y, kk
         )
         tm = jax.tree.map(replica_gate(valid), new_tm, tm)
         buf = jax.tree.map(replica_gate(valid), new_buf, buf)
@@ -117,7 +126,7 @@ def _consume_many_replicated(
     aux = None
     if monitor:
         preds = tm_mod.predict_batch_replicated_(
-            cfg, tm, rt, jnp.swapaxes(xs, 0, 1)         # [R, k, f]
+            cfg, tm, rt, jnp.swapaxes(xs, 0, 1)         # [R, k, f|Wf]
         )
         aux = ChunkAux(
             predicted=preds.astype(jnp.int32),          # [R, k]
@@ -157,15 +166,21 @@ def _consume_many(
     implementations are pinned bitwise against each other by the K = 1
     fleet parity suite (tests/test_fleet.py), which is a stronger check
     than sharing the body would be.
+
+    PACKED buffers (uint32 rows, §13): popped rows unpack once for the
+    elementwise feedback; the hoisted monitoring pass stays packed (dtype
+    routing in ``predict_batch_``). Bit-identical to the unpacked drain.
     """
     limit = jnp.asarray(limit, dtype=jnp.int32)
+    packed = ss.buf.data_x.dtype == jnp.uint32          # static at trace time
 
     def body(carry, inp):
         buf, tm, n = carry
         i, kk = inp
         new_buf, x, y, nonempty = buf_mod.pop(buf)
         valid = (i < limit) & nonempty
-        new_tm, _, activity = fb_mod.train_update(cfg, tm, rt, x, y, kk)
+        xb = packing.unpack_bits(x, cfg.n_features) if packed else x
+        new_tm, _, activity = fb_mod.train_update(cfg, tm, rt, xb, y, kk)
         tm = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new_tm, tm)
         buf = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new_buf, buf)
         n = n + valid.astype(jnp.int32)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import dispatch
+from repro.kernels import dispatch, packing
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +162,26 @@ def ta_actions(cfg: TMConfig, state: TMState, rt: TMRuntime) -> jax.Array:
     return (include & rt.ta_and_mask) | rt.ta_or_mask
 
 
+def make_literals_packed(xs_packed: jax.Array, n_features: int) -> jax.Array:
+    """Packed features [..., ceil(f/32)] u32 -> packed literals (§13 layout).
+
+    The packed twin of :func:`make_literals`: the complement half is a word
+    operation, so buffered packed rows become literal words without unpacking.
+    """
+    return packing.literals_from_packed(xs_packed, n_features)
+
+
+def ta_actions_packed(cfg: TMConfig, state: TMState, rt: TMRuntime) -> jax.Array:
+    """Post-fault include masks, packed to uint32 words (§13 layout).
+
+    This is the include-mask derivation boundary of the packed datapath: the
+    int8 TA bank stays unpacked (feedback needs per-literal state), and the
+    include plane packs ONCE per batched clause-eval call — O(C·J·L) pack
+    work amortized over O(B·C·J·W) evaluation work.
+    """
+    return packing.pack_include(ta_actions(cfg, state, rt), cfg.n_features)
+
+
 def clause_polarity(cfg: TMConfig) -> jax.Array:
     """+1 for even-indexed clauses, -1 for odd (half vote for, half against)."""
     return jnp.where(jnp.arange(cfg.max_clauses) % 2 == 0, 1, -1).astype(jnp.int32)
@@ -206,6 +226,25 @@ def eval_clauses_batch(
     return out & rt.clause_mask[None, None, :]
 
 
+def eval_clauses_batch_packed(
+    cfg: TMConfig,
+    include_packed: jax.Array,   # [C, J, W] uint32 (packed post-fault actions)
+    literals_packed: jax.Array,  # [B, W] uint32
+    rt: TMRuntime,
+    *,
+    training: bool,
+) -> jax.Array:
+    """Batch-first clause outputs [B, C, J] bool from the packed datapath.
+
+    Bit-identical to :func:`eval_clauses_batch` on the corresponding
+    unpacked operands (the kernel contract's packed parity guarantee).
+    """
+    out = dispatch.resolve(cfg.backend).clause_eval_batch_packed(
+        include_packed, literals_packed, training=training
+    )
+    return out & rt.clause_mask[None, None, :]
+
+
 def class_sums(cfg: TMConfig, clause_out: jax.Array) -> jax.Array:
     """Per-class vote: sum of +/- polarity clause outputs over the last axis.
 
@@ -239,10 +278,25 @@ def forward_batch(
     *,
     training: bool = False,
 ):
-    """A batch through the datapath. Returns (clause_out [B,C,J], votes [B,C])."""
-    lits = make_literals(xs)
-    include = ta_actions(cfg, state, rt)
-    clauses = eval_clauses_batch(cfg, include, lits, rt, training=training)
+    """A batch through the datapath. Returns (clause_out [B,C,J], votes [B,C]).
+
+    ``xs`` is either bool features [B, f] or PACKED features
+    [B, ceil(f/32)] uint32 (§13) — the dtype is static under tracing, so
+    the branch specializes per representation and packed callers
+    (buffer-fed monitoring, packed serving/analysis) route to the
+    AND+popcount kernels with no call-site changes. Outputs are
+    bit-identical across the two routes.
+    """
+    if xs.dtype == jnp.uint32:
+        lits = make_literals_packed(xs, cfg.n_features)
+        include = ta_actions_packed(cfg, state, rt)
+        clauses = eval_clauses_batch_packed(
+            cfg, include, lits, rt, training=training
+        )
+    else:
+        lits = make_literals(xs)
+        include = ta_actions(cfg, state, rt)
+        clauses = eval_clauses_batch(cfg, include, lits, rt, training=training)
     return clauses, class_sums(cfg, clauses)
 
 
@@ -287,12 +341,22 @@ def predict_batch_replicated_(
     ONE dispatched ``clause_eval_batch_replicated`` contraction. Replica
     ``r`` reproduces :func:`predict_batch_` on batch ``r % D`` bit-for-bit
     (the kernel contract's stacking guarantee; argmax sees identical votes).
+
+    ``xs`` may be PACKED features [D, B, ceil(f/32)] uint32 (§13): the
+    dtype routes to the packed replicated kernel, bit-identically.
     """
-    lits = make_literals(xs)                            # [D, B, 2f]
-    include = ta_actions(cfg, state, rt)                # [R, C, J, L]
-    clauses = dispatch.resolve(cfg.backend).clause_eval_batch_replicated(
-        include, lits, training=False
-    )                                                   # [R, B, C, J]
+    if xs.dtype == jnp.uint32:
+        lits = make_literals_packed(xs, cfg.n_features)  # [D, B, W]
+        include = ta_actions_packed(cfg, state, rt)      # [R, C, J, W]
+        clauses = dispatch.resolve(
+            cfg.backend
+        ).clause_eval_batch_replicated_packed(include, lits, training=False)
+    else:
+        lits = make_literals(xs)                        # [D, B, 2f]
+        include = ta_actions(cfg, state, rt)            # [R, C, J, L]
+        clauses = dispatch.resolve(cfg.backend).clause_eval_batch_replicated(
+            include, lits, training=False
+        )                                               # [R, B, C, J]
     clauses = clauses & rt.clause_mask
     votes = class_sums(cfg, clauses)                    # [R, B, C]
     votes = jnp.where(rt.class_mask, votes, jnp.iinfo(jnp.int32).min)

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 
 class RingBuffer(NamedTuple):
-    data_x: jax.Array  # [capacity, f] bool
+    data_x: jax.Array  # [capacity, f] bool — or [capacity, ceil(f/32)] uint32
+                       # when the buffer stores PACKED rows (DESIGN.md §13)
     data_y: jax.Array  # [capacity] int32
     head: jax.Array    # scalar int32 — next slot to pop
     size: jax.Array    # scalar int32 — valid entries
@@ -24,9 +25,19 @@ class RingBuffer(NamedTuple):
         return self.data_x.shape[0]
 
 
-def make(capacity: int, n_features: int) -> RingBuffer:
+def make(capacity: int, n_features: int, *, packed: bool = False) -> RingBuffer:
+    """Empty ring. ``packed=True`` stores uint32 word rows (ceil(f/32) per
+    datapoint — ~1/8 the bool footprint); producers must then push rows
+    already packed per :mod:`repro.kernels.packing`."""
+    if packed:
+        from repro.kernels import packing
+
+        data_x = jnp.zeros((capacity, packing.n_words(n_features)),
+                           dtype=jnp.uint32)
+    else:
+        data_x = jnp.zeros((capacity, n_features), dtype=bool)
     return RingBuffer(
-        data_x=jnp.zeros((capacity, n_features), dtype=bool),
+        data_x=data_x,
         data_y=jnp.zeros((capacity,), dtype=jnp.int32),
         head=jnp.int32(0),
         size=jnp.int32(0),
@@ -42,7 +53,9 @@ def push(buf: RingBuffer, x: jax.Array, y: jax.Array) -> tuple[RingBuffer, jax.A
     cap = buf.capacity
     full = buf.size >= cap
     tail = jnp.mod(buf.head + buf.size, cap)
-    new_x = jax.lax.dynamic_update_slice(buf.data_x, x[None].astype(bool), (tail, 0))
+    new_x = jax.lax.dynamic_update_slice(
+        buf.data_x, x[None].astype(buf.data_x.dtype), (tail, 0)
+    )
     new_y = jax.lax.dynamic_update_slice(
         buf.data_y, y[None].astype(jnp.int32), (tail,)
     )

@@ -326,3 +326,184 @@ def clause_eval_batch_replicated(
     fired = jnp.swapaxes(viol == 0, 1, 2).reshape(R, B, C, J)
     empty = (n_inc == 0).reshape(R, 1, C, J)
     return jnp.where(empty, jnp.bool_(training), fired)
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed datapath: AND + popcount over uint32 words (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The packed kernels are the closest TPU analogue of the FPGA's literal
+# wires: the include bank and the literal rows are uint32 words (32 literals
+# per lane element), and
+#
+#     violations[cj, b] = sum_w popcount(include[cj, w] & ~literal[b, w])
+#
+# This is VPU work, not MXU work — popcount has no matmul form — but the
+# operand traffic shrinks 8x vs the int8 GEMM formulation and the word axis
+# is 32x shorter than the literal axis, so the whole reduction usually fits
+# ONE word block where the unpacked kernel streams several BLK_L blocks.
+# The grid reuses the unpacked kernels' innermost-axis accumulation pattern
+# on the word axis for datapaths wider than BLK_W*32 = 4096 literals.
+#
+# Tail safety: the packing contract (packing.py) zeroes include tail bits,
+# so `include & ~literals` is zero at every pad position — the word padding
+# added here (both word-axis padding to BLK_W and batch padding to BLK_B)
+# only ever ANDs against zero include words and is sliced off the output.
+
+BLK_B = 128   # datapoint columns per block (lane dim of the output tile)
+BLK_W = 128   # uint32 words per block — 4096 literals per accumulation step
+
+
+def _pad_w(W: int) -> tuple[int, int]:
+    """(padded word width, word block) for a packed datapath of W words."""
+    blk = min(BLK_W, -(-W // 8) * 8)  # 8 = uint32 sublane granule
+    return -(-W // blk) * blk, blk
+
+
+def _packed_kernel(w_axis: int, inc_ref, lit_ref, out_ref):
+    # inc: [BLK_CJ, blk_w] u32, lit: [BLK_B, blk_w] u32 -> accumulate
+    # [BLK_CJ, BLK_B] i32 violation partial sums over the word axis.
+    @pl.when(pl.program_id(w_axis) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    viol = inc_ref[...][:, None, :] & ~lit_ref[...][None, :, :]
+    out_ref[...] += jnp.sum(
+        jax.lax.population_count(viol).astype(jnp.int32), axis=-1
+    )
+
+
+def _packed_kernel_replicated(w_axis: int, inc_ref, lit_ref, out_ref):
+    # Leading length-1 replica block, as in _kernel_replicated.
+    @pl.when(pl.program_id(w_axis) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    viol = inc_ref[0][:, None, :] & ~lit_ref[0][None, :, :]
+    out_ref[...] += jnp.sum(
+        jax.lax.population_count(viol).astype(jnp.int32), axis=-1
+    )[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_counts_batch_packed(
+    include_packed: jax.Array,   # [CJ, W] uint32 — packed include rows
+    literals_packed: jax.Array,  # [B, W] uint32 — packed literal rows
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Violations [CJ, B] i32 via the word-tiled AND+popcount grid.
+
+    ``n_included`` has no per-datapoint dependence, so unlike the unpacked
+    kernels there is no ones-column trick to fold it into the same launch —
+    callers derive emptiness from the include words directly (cheap:
+    [CJ, W] is 32x smaller than the bool include bank).
+    """
+    cj, W = include_packed.shape
+    B = literals_packed.shape[0]
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Wp, blk_w = _pad_w(W)
+    Bp = -(-B // BLK_B) * BLK_B
+
+    inc = jnp.zeros((cjp, Wp), dtype=jnp.uint32).at[:cj, :W].set(
+        include_packed
+    )
+    lit = jnp.zeros((Bp, Wp), dtype=jnp.uint32).at[:B, :W].set(
+        literals_packed
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_packed_kernel, 2),
+        grid=(cjp // BLK_CJ, Bp // BLK_B, Wp // blk_w),
+        in_specs=[
+            pl.BlockSpec((BLK_CJ, blk_w), lambda i, j, w: (i, w)),
+            pl.BlockSpec((BLK_B, blk_w), lambda i, j, w: (j, w)),
+        ],
+        out_specs=pl.BlockSpec((BLK_CJ, BLK_B), lambda i, j, w: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((cjp, Bp), jnp.int32),
+        interpret=interpret,
+    )(inc, lit)
+    return out[:cj, :B]
+
+
+def clause_eval_batch_packed(
+    include_packed: jax.Array,   # [C, J, W] uint32 (packed post-fault actions)
+    literals_packed: jax.Array,  # [B, W] uint32
+    *,
+    training: bool,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed packed batch clause outputs [B, C, J] bool.
+
+    Same contract as ``ref.clause_eval_batch_packed`` — and, through the
+    packing contract, bit-identical to the unpacked oracle.
+    """
+    C, J, W = include_packed.shape
+    B = literals_packed.shape[0]
+    viol = clause_counts_batch_packed(
+        include_packed.reshape(C * J, W), literals_packed, interpret=interpret
+    )
+    fired = (viol == 0).T.reshape(B, C, J)
+    empty = ~jnp.any(include_packed != 0, axis=-1)
+    return jnp.where(empty[None], jnp.bool_(training), fired)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clause_counts_batch_replicated_packed(
+    include_packed: jax.Array,   # [R, CJ, W] uint32
+    literals_packed: jax.Array,  # [D, B, W] uint32 — replica r reads r % D
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Violations [R, CJ, B] i32 in ONE launch: the packed replica plane.
+
+    Grid (replica, clause-block, column-block, word-block) with the same
+    ``r % D`` rhs index map as :func:`clause_counts_batch_replicated` — the
+    factored data-stream rule carries over to packed words unchanged.
+    """
+    R, cj, W = include_packed.shape
+    D, B, _ = literals_packed.shape
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    cjp = -(-cj // BLK_CJ) * BLK_CJ
+    Wp, blk_w = _pad_w(W)
+    Bp = -(-B // BLK_B) * BLK_B
+
+    inc = jnp.zeros((R, cjp, Wp), dtype=jnp.uint32).at[:, :cj, :W].set(
+        include_packed
+    )
+    lit = jnp.zeros((D, Bp, Wp), dtype=jnp.uint32).at[:, :B, :W].set(
+        literals_packed
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_packed_kernel_replicated, 3),
+        grid=(R, cjp // BLK_CJ, Bp // BLK_B, Wp // blk_w),
+        in_specs=[
+            pl.BlockSpec((1, BLK_CJ, blk_w), lambda r, i, j, w: (r, i, w)),
+            pl.BlockSpec((1, BLK_B, blk_w), lambda r, i, j, w: (r % D, j, w)),
+        ],
+        out_specs=pl.BlockSpec((1, BLK_CJ, BLK_B), lambda r, i, j, w: (r, i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, cjp, Bp), jnp.int32),
+        interpret=interpret,
+    )(inc, lit)
+    return out[:, :cj, :B]
+
+
+def clause_eval_batch_replicated_packed(
+    include_packed: jax.Array,   # [R, C, J, W] uint32
+    literals_packed: jax.Array,  # [D, B, W] uint32 — replica r reads r % D
+    *,
+    training: bool,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed packed replica-first batch outputs [R, B, C, J] bool."""
+    R, C, J, W = include_packed.shape
+    B = literals_packed.shape[1]
+    viol = clause_counts_batch_replicated_packed(
+        include_packed.reshape(R, C * J, W), literals_packed,
+        interpret=interpret,
+    )
+    fired = jnp.swapaxes(viol == 0, 1, 2).reshape(R, B, C, J)
+    empty = ~jnp.any(include_packed != 0, axis=-1).reshape(R, 1, C, J)
+    return jnp.where(empty, jnp.bool_(training), fired)

@@ -58,6 +58,17 @@ class KernelBackend(NamedTuple):
       this entry; pallas: one 3-D (replica, clause-block, column-block)
       grid with ``r % D`` rhs index maps); MUST equal stacking
       ``clause_eval_batch`` per replica bit-for-bit.
+    * ``clause_eval_batch_packed(include_packed [C,J,W] uint32,
+      literals_packed [B,W] uint32, *, training) -> [B,C,J]`` — the
+      bit-packed datapath (DESIGN.md §13): W = 2*ceil(f/32) words per the
+      two-half layout in :mod:`repro.kernels.packing`, clause eval as
+      AND + popcount (``fires <=> sum_w popcount(inc & ~lit) == 0``). MUST
+      equal ``clause_eval_batch`` on the corresponding unpacked operands
+      bit-for-bit — the unpacked entry is the packed path's parity oracle.
+    * ``clause_eval_batch_replicated_packed(include_packed [R,C,J,W],
+      literals_packed [D,B,W], *, training) -> [R,B,C,J]`` — replica-first
+      packed analysis/serving pass, same ``r % D`` data-stream rule; MUST
+      equal ``clause_eval_batch_replicated`` on unpacked operands.
     * ``feedback_step(ta_state [C,J,L], literals [L], clause_out [C,J],
       type1_sel [C,J], type2_sel [C,J], u [C,J,L], *, s, n_states, s_policy,
       boost_true_positive) -> new ta_state`` — one datapoint's TA update.
@@ -74,6 +85,8 @@ class KernelBackend(NamedTuple):
     clause_eval_batch: Callable[..., jax.Array]
     clause_eval_replicated: Callable[..., jax.Array]
     clause_eval_batch_replicated: Callable[..., jax.Array]
+    clause_eval_batch_packed: Callable[..., jax.Array]
+    clause_eval_batch_replicated_packed: Callable[..., jax.Array]
     feedback_step: Callable[..., jax.Array]
     feedback_step_replicated: Callable[..., jax.Array]
 
@@ -126,6 +139,10 @@ def _make_ref() -> KernelBackend:
         clause_eval_batch=ref.clause_eval_batch,
         clause_eval_replicated=ref.clause_eval_replicated,
         clause_eval_batch_replicated=ref.clause_eval_batch_replicated,
+        clause_eval_batch_packed=ref.clause_eval_batch_packed,
+        clause_eval_batch_replicated_packed=(
+            ref.clause_eval_batch_replicated_packed
+        ),
         feedback_step=ref.feedback_step,
         feedback_step_replicated=ref.feedback_step_replicated,
     )
@@ -140,6 +157,10 @@ def _make_pallas() -> KernelBackend:
         clause_eval_batch=ops.clause_eval_batch,
         clause_eval_replicated=ops.clause_eval_replicated,
         clause_eval_batch_replicated=ops.clause_eval_batch_replicated,
+        clause_eval_batch_packed=ops.clause_eval_batch_packed,
+        clause_eval_batch_replicated_packed=(
+            ops.clause_eval_batch_replicated_packed
+        ),
         feedback_step=ops.feedback_step,
         feedback_step_replicated=ops.feedback_step_replicated,
     )

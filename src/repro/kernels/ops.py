@@ -53,6 +53,26 @@ def clause_eval_batch_replicated(
     )
 
 
+def clause_eval_batch_packed(
+    include_packed: jax.Array, literals_packed: jax.Array, *, training: bool
+) -> jax.Array:
+    """[C, J, W] u32 x [B, W] u32 -> [B, C, J] bool (see
+    ref.clause_eval_batch_packed)."""
+    return _ce.clause_eval_batch_packed(
+        include_packed, literals_packed, training=training, interpret=INTERPRET
+    )
+
+
+def clause_eval_batch_replicated_packed(
+    include_packed: jax.Array, literals_packed: jax.Array, *, training: bool
+) -> jax.Array:
+    """[R, C, J, W] u32 x [D, B, W] u32 -> [R, B, C, J] bool (see
+    ref.clause_eval_batch_replicated_packed)."""
+    return _ce.clause_eval_batch_replicated_packed(
+        include_packed, literals_packed, training=training, interpret=INTERPRET
+    )
+
+
 def feedback_step(
     ta_state: jax.Array,
     literals: jax.Array,

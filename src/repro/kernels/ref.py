@@ -115,6 +115,67 @@ def clause_eval_batch_replicated(
     return out.reshape(R, B, C, J)
 
 
+def clause_eval_batch_packed(
+    include_packed: jax.Array, literals_packed: jax.Array, *, training: bool
+) -> jax.Array:
+    """Bit-packed batch clause eval: the FPGA's AND-tree, word-at-a-time.
+
+    Args:
+      include_packed: [C, J, W] uint32 — include masks packed per
+        ``packing.pack_include`` (W = 2*ceil(f/32) words; tail bits ZERO).
+      literals_packed: [B, W] uint32 — literal rows packed per
+        ``packing.pack_literals`` (same two-half layout).
+      training: empty-clause convention, as in :func:`clause_eval_batch`.
+
+    Returns: [B, C, J] bool, bit-identical to the unpacked oracle on the
+    corresponding bool operands.
+
+        violations[b, c, j] = sum_w popcount(include[c,j,w] & ~literal[b,w])
+        clause fires      <=> violations == 0
+        clause is empty   <=> sum_w popcount(include[c,j,w]) == 0
+
+    Tail safety: include tail bits are zero by the packing contract, so
+    ``include & ~literals`` is zero at every pad position even though the
+    complement sets the literal tail to ones — each per-word popcount equals
+    the unpacked per-word violation count exactly, and the sums match
+    bit-for-bit.
+    """
+    viol_words = include_packed[None] & ~literals_packed[:, None, None, :]
+    viol = jnp.sum(
+        jax.lax.population_count(viol_words).astype(jnp.int32), axis=-1
+    )                                                     # [B, C, J]
+    fired = viol == 0
+    empty = ~jnp.any(include_packed != 0, axis=-1)        # [C, J]
+    return jnp.where(empty[None], jnp.bool_(training), fired)
+
+
+def clause_eval_batch_replicated_packed(
+    include_packed: jax.Array, literals_packed: jax.Array, *, training: bool
+) -> jax.Array:
+    """Replica-first bit-packed batch eval: include [R, C, J, W] uint32 x
+    literals [D, B, W] uint32 -> [R, B, C, J] bool.
+
+    Replica ``r`` reads literal batch ``r % D`` — the same factored layout
+    rule as :func:`clause_eval_batch_replicated`, on packed words. MUST be
+    bit-identical to stacking :func:`clause_eval_batch_packed` per replica,
+    and (via the packing contract) to the unpacked replicated oracle.
+    """
+    R, C, J, W = include_packed.shape
+    D, B, _ = literals_packed.shape
+    if R % D:
+        raise ValueError(f"data replicas {D} must divide replicas {R}")
+    inc = include_packed.reshape(R // D, D, 1, C, J, W)
+    lit = literals_packed[None, :, :, None, None, :]      # [1, D, B, 1, 1, W]
+    viol = jnp.sum(
+        jax.lax.population_count(inc & ~lit).astype(jnp.int32), axis=-1
+    )                                                     # [H, D, B, C, J]
+    fired = viol == 0
+    empty = ~jnp.any(include_packed != 0, axis=-1)        # [R, C, J]
+    empty = empty.reshape(R // D, D, 1, C, J)
+    out = jnp.where(empty, jnp.bool_(training), fired)
+    return out.reshape(R, B, C, J)
+
+
 def feedback_step(
     ta_state: jax.Array,    # [C, J, L] int8/int16 (pre-update)
     literals: jax.Array,    # [L] bool

@@ -34,7 +34,9 @@ from repro.data import buffer as buf_mod
 def _enqueue_rows(ss, block: int, xs, ys, counts):
     """Push up to ``counts[r]`` staged rows into EVERY replica's ring buffer.
 
-    xs [K, B, f] bool, ys [K, B] i32, counts [K] i32 — ONE jitted dispatch
+    xs [K, B, f] bool (or [K, B, ceil(f/32)] uint32 when the fleet's
+    buffers are packed — the push is dtype-agnostic), ys [K, B] i32,
+    counts [K] i32 — ONE jitted dispatch
     lands a whole ingress block (rows keep their per-replica submission
     order; rows at index >= counts[r] are padding and never touch state).
     Returns (new session state, accepted-row count [K] i32).
@@ -75,12 +77,25 @@ class BatchRouter:
     """
 
     def __init__(self, n_replicas: int, n_features: int, capacity: int,
-                 block: int = 32):
+                 block: int = 32, *, packed: bool = False):
         K = n_replicas
         self.n_replicas = K
+        self.n_features = n_features
         self.capacity = capacity
         self.block = max(1, min(block, capacity))
-        self._stage_x = np.zeros((K, self.block, n_features), dtype=bool)
+        self.packed = packed
+        if packed:
+            # Packed staging (DESIGN.md §13): rows pack host-side at the
+            # staging boundary, so the staging block, the flush transfer
+            # AND the device ring rows all carry ceil(f/32) uint32 words
+            # instead of f bools (~8x less ingress bandwidth; the flush
+            # enqueue is dtype-agnostic).
+            from repro.kernels.packing import n_words
+
+            self._stage_x = np.zeros((K, self.block, n_words(n_features)),
+                                     dtype=np.uint32)
+        else:
+            self._stage_x = np.zeros((K, self.block, n_features), dtype=bool)
         self._stage_y = np.zeros((K, self.block), dtype=np.int32)
         self._count = np.zeros(K, dtype=np.int32)
         self.dropped = np.zeros(K, dtype=np.int64)   # backpressure events
@@ -106,7 +121,7 @@ class BatchRouter:
         acceptance is ``dev_size + staged < capacity``, which is exactly
         what an immediate device push would have reported.
         """
-        K, f = self.n_replicas, self._stage_x.shape[-1]
+        K, f = self.n_replicas, self.n_features
         xs = np.asarray(xs, dtype=bool)
         if xs.shape != (K, f):
             xs = np.broadcast_to(xs, (K, f))
@@ -125,7 +140,14 @@ class BatchRouter:
         idx = np.nonzero(accepted)[0]
         if idx.size:
             c = self._count[idx]
-            self._stage_x[idx, c] = xs[idx]
+            if self.packed:
+                from repro.kernels.packing import pack_bits_np
+
+                # Rows pack here, at the staging boundary: everything
+                # downstream (staging block, flush, ring rows) is words.
+                self._stage_x[idx, c] = pack_bits_np(xs[idx])
+            else:
+                self._stage_x[idx, c] = xs[idx]
             self._stage_y[idx, c] = ys[idx]
             self._count[idx] += 1
         self.dropped += mask & ~accepted

@@ -44,6 +44,7 @@ from repro.core.online import ChunkAux, SessionState
 from repro.core.tm import TMConfig, TMRuntime, TMState, init_runtime
 from repro.data import buffer as buf_mod
 from repro.distributed import sharding as shard_mod
+from repro.kernels import packing
 from repro.serve import router as router_mod
 
 
@@ -152,12 +153,22 @@ class ServiceConfig:
     scalars give a homogeneous fleet, length-K sequences give every member
     its own (s, T) without re-JIT. ``ingress_block`` is B_ingress — the
     router's staged rows per replica per flushed dispatch.
+
+    ``packed`` switches the whole boolean datapath to the bit-packed
+    uint32 representation (DESIGN.md §13): rows pack host-side at the
+    router's staging boundary, the ring buffers store ceil(f/32) words
+    per datapoint (~8x less ingress/buffer traffic), and every
+    inference/analysis/monitoring pass runs the AND+popcount clause
+    kernels. Served predictions, drained TA states and analysis
+    accuracies are bit-identical to the unpacked path (which stays the
+    parity oracle — pinned by tests/test_scale.py).
     """
 
     replicas: int = 1
     buffer_capacity: int = 64
     chunk: int = 16                   # datapoints drained per jitted call
     ingress_block: int = 32           # staged rows per replica per flush
+    packed: bool = False              # bit-packed datapath (DESIGN.md §13)
     s: Union[float, Sequence[float], None] = None
     T: Union[int, Sequence[int], None] = None
     policy: AdaptPolicy = dataclasses.field(default_factory=AdaptPolicy)
@@ -232,7 +243,9 @@ class TMService:
         self.chunk = max(1, min(sc.chunk, sc.buffer_capacity))
         self.mesh = sc.mesh
         self.policy = sc.policy
-        self.eval_x = None if eval_x is None else jnp.asarray(eval_x, bool)
+        # Packed services hold the eval set as words too: every analysis
+        # pass then rides the packed kernels (dtype routing in the core).
+        self.eval_x = None if eval_x is None else self._ingest(eval_x)
         self.eval_y = None if eval_y is None else jnp.asarray(eval_y,
                                                               jnp.int32)
         # K = 1 with scalar runtime ports keeps the specialized
@@ -254,7 +267,8 @@ class TMService:
             keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seed])
         self._keys = keys                                  # [K, key]
 
-        buf1 = buf_mod.make(sc.buffer_capacity, cfg.n_features)
+        buf1 = buf_mod.make(sc.buffer_capacity, cfg.n_features,
+                            packed=sc.packed)
         bufs = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (K,) + a.shape), buf1
         )
@@ -269,7 +283,8 @@ class TMService:
                 jax.device_put, (self._ss, self._keys), sh
             )
         self.router = router_mod.BatchRouter(
-            K, cfg.n_features, sc.buffer_capacity, sc.ingress_block
+            K, cfg.n_features, sc.buffer_capacity, sc.ingress_block,
+            packed=sc.packed,
         )
         self._dev_size = np.zeros(K, dtype=np.int64)  # buffer-occupancy mirror
         self._full_mask = np.ones(K, dtype=bool)
@@ -279,6 +294,17 @@ class TMService:
         # (best stays nan, so the first due analysis can only improve).
         self._ps.best_state = self._ss.tm
         self.history: list = []            # (steps [K], accuracies [K])
+
+    def _ingest(self, xs) -> jax.Array:
+        """Bool rows -> the service's wire representation: bool features
+        unpacked, uint32 words when ``sc.packed`` (already-packed uint32
+        input passes through)."""
+        xs = jnp.asarray(xs)
+        if not self.sc.packed:
+            return xs.astype(bool)
+        if xs.dtype == jnp.uint32:
+            return xs
+        return packing.pack_bits(xs.astype(bool))
 
     # -- device state (mirror-preserving) -----------------------------------
 
@@ -435,9 +461,10 @@ class TMService:
         """Fleet inference [K, B]: every member's batch in ONE contraction.
 
         ``xs`` is [B, f] (the same batch served by all members) or
-        [K, B, f] (one batch per member).
+        [K, B, f] (one batch per member). Packed services pack the batch
+        here and serve it through the AND+popcount kernels, bit-identically.
         """
-        xs = jnp.asarray(xs, dtype=bool)
+        xs = self._ingest(xs)
         if xs.ndim == 2 and self._k1:
             tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
             return np.asarray(

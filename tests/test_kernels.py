@@ -7,12 +7,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, packing, ref
 
 SHAPES = [
     (1, 2, 5),      # degenerate
     (3, 16, 32),    # the paper's iris machine
     (2, 6, 17),     # non-aligned everything
+    (3, 8, 31),     # one under the packed-word boundary (tail masking)
+    (3, 8, 33),     # one over it (multi-word + tail)
     (10, 100, 200), # MNIST-ish TM
     (4, 33, 129),   # one over tile boundaries
     (2, 6, 513),    # one over the BLK_L literal-block boundary — exercises
@@ -85,12 +87,35 @@ def test_feedback_states_stay_in_bounds():
     assert o.min() >= 1 and o.max() <= 2 * n
 
 
+# Packed-kernel parity (DESIGN.md §13). The packed kernels are layout-
+# agnostic — any include/literal pair packed with the SAME word layout and
+# zero include tails works — so here the literal axis packs contiguously
+# (pack_bits over L), exercising tail masking at L = 31/33 and multi-word
+# accumulation at L = 513 directly against the unpacked oracle.
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("mod", [ref, ops], ids=["ref", "pallas"])
+def test_clause_eval_batch_packed_matches_unpacked_oracle(shape, mod):
+    C, J, L = shape
+    rng = np.random.default_rng(hash(("packed",) + shape) % 2**31)
+    include = jnp.asarray(rng.random((C, J, L)) < 0.3)
+    lits = jnp.asarray(rng.random((9, L)) < 0.5)
+    inc_p = packing.pack_bits(include)
+    lit_p = packing.pack_bits(lits)
+    for training in (True, False):
+        want = ref.clause_eval_batch(include, lits, training=training)
+        got = mod.clause_eval_batch_packed(inc_p, lit_p, training=training)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
 # Replica-parallel shapes: (R, D, C, J, L) with odd sizes that straddle the
 # int8 32x128 tile boundaries, plus grid-sharing layouts (D < R).
 REP_SHAPES = [
     (1, 1, 1, 2, 5),       # degenerate single replica
     (3, 1, 2, 6, 17),      # one data stream shared by 3 grid cells
     (6, 3, 3, 16, 32),     # the iris machine, 2x3 grid-over-orderings
+    (2, 2, 2, 8, 31),      # one under the packed-word boundary
     (5, 5, 2, 7, 33),      # replicas == data streams (system path), odd L
     (4, 2, 4, 33, 129),    # one over both tile boundaries
     (4, 2, 2, 6, 513),     # one over the BLK_L literal-block boundary
@@ -136,6 +161,25 @@ def test_clause_eval_batch_replicated_matches_stacked(shape, mod):
             for r in range(R)
         ])
         got = mod.clause_eval_batch_replicated(include, lits, training=training)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("shape", REP_SHAPES)
+@pytest.mark.parametrize("mod", [ref, ops], ids=["ref", "pallas"])
+def test_clause_eval_batch_replicated_packed_matches_unpacked(shape, mod):
+    R, D, C, J, L = shape
+    rng = np.random.default_rng(hash(("packed",) + shape) % 2**31)
+    include = jnp.asarray(rng.random((R, C, J, L)) < 0.3)
+    lits = jnp.asarray(rng.random((D, 5, L)) < 0.5)
+    inc_p = packing.pack_bits(include)
+    lit_p = packing.pack_bits(lits)
+    for training in (True, False):
+        want = ref.clause_eval_batch_replicated(
+            include, lits, training=training
+        )
+        got = mod.clause_eval_batch_replicated_packed(
+            inc_p, lit_p, training=training
+        )
         np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 

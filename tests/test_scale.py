@@ -73,13 +73,14 @@ def test_sweep_cell_ref_pallas_bitwise_full_width():
 # ---------------------------------------------------------------------------
 
 
-def _service(side, backend, K=2):
+def _service(side, backend, K=2, packed=False):
     cfg, params = _cfg(side, backend)
     tr_x, tr_y, te_x, te_y = mnist.splits(60, 40, seed=5, side=side)
     svc = TMService(
         cfg, init_state(cfg),
         ServiceConfig(replicas=K, buffer_capacity=32, chunk=8,
                       s=params.s_online, T=params.T, seed=[3, 4][:K],
+                      packed=packed,
                       policy=AdaptPolicy(analyze_every=8,
                                          rollback_threshold=0.1)),
         eval_x=te_x, eval_y=te_y,
@@ -139,8 +140,8 @@ def test_service_end_to_end_rollback_full_width(backend):
     _e2e_rollback(SLOW_SIDE, backend)
 
 
-def _tick_trajectory(side, backend):
-    svc, (tr_x, tr_y, _, _) = _service(side, backend)
+def _tick_trajectory(side, backend, packed=False):
+    svc, (tr_x, tr_y, _, _) = _service(side, backend, packed=packed)
     svc.offline_train(tr_x[:20], tr_y[:20], n_epochs=2)
     reports = _drive(svc, tr_x, tr_y, n=16)
     return svc, reports
@@ -172,3 +173,60 @@ def test_service_tick_ref_pallas_bitwise_fast():
 def test_service_tick_ref_pallas_bitwise_full_width():
     """f=784: whole tick trajectories bitwise identical across backends."""
     _assert_tick_parity(SLOW_SIDE)
+
+
+# ---------------------------------------------------------------------------
+# packed datapath parity: whole service trajectories, packed vs unpacked
+# ---------------------------------------------------------------------------
+
+
+def _assert_packed_parity(side, backend):
+    """ServiceConfig(packed=True) == packed=False bit for bit: trained TA
+    states, tick reports (counts AND accuracies), and served predictions.
+
+    The packed service stores uint32 rows in buffer + staging and runs
+    every inference/analysis pass through the AND+popcount kernels; the
+    unpacked trajectory is the §13 parity oracle.
+    """
+    base_svc, base_rep = _tick_trajectory(side, backend, packed=False)
+    pk_svc, pk_rep = _tick_trajectory(side, backend, packed=True)
+    # packed storage really is words: ~8-32x smaller ring rows
+    assert pk_svc.ss.buf.data_x.dtype == jnp.uint32
+    assert base_svc.ss.buf.data_x.dtype == jnp.bool_
+    assert pk_svc.ss.buf.data_x.shape[-1] < base_svc.ss.buf.data_x.shape[-1]
+    np.testing.assert_array_equal(
+        np.asarray(base_svc.ss.tm.ta_state), np.asarray(pk_svc.ss.tm.ta_state)
+    )
+    np.testing.assert_array_equal(base_svc.steps, pk_svc.steps)
+    assert len(base_rep) == len(pk_rep)
+    for a, b in zip(base_rep, pk_rep):
+        np.testing.assert_array_equal(a.trained, b.trained)
+        if a.accuracy is None:
+            assert b.accuracy is None
+        else:
+            np.testing.assert_array_equal(a.accuracy, b.accuracy)
+    _, (_, _, te_x, _) = _cfg(side, backend), mnist.splits(
+        60, 40, seed=5, side=side
+    )
+    np.testing.assert_array_equal(base_svc.serve(te_x), pk_svc.serve(te_x))
+    np.testing.assert_array_equal(base_svc.analyze(), pk_svc.analyze())
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_service_packed_parity_word_tail(backend):
+    """f=49 (side 7, NOT a multiple of 32): tail-word masking through the
+    whole service trajectory, per backend."""
+    _assert_packed_parity(7, backend)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_service_packed_parity_fast(backend):
+    """f=196: packed == unpacked service trajectories, per backend."""
+    _assert_packed_parity(FAST_SIDE, backend)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_service_packed_parity_full_width(backend):
+    """f=784: packed == unpacked at the full MNIST width, per backend."""
+    _assert_packed_parity(SLOW_SIDE, backend)
