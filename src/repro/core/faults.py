@@ -98,6 +98,30 @@ def apply_packed(
     return (include_packed & and_packed) | or_packed
 
 
+def stuck_at_runtime(
+    cfg: TMConfig,
+    rt: TMRuntime,
+    fraction: float,
+    stuck_value: int,
+    *,
+    seed: int | None = None,
+    offset: int = 0,
+) -> TMRuntime:
+    """One-call §5.3 injection: build a stuck-at mask set and write it in.
+
+    ``seed=None`` gives the paper's deterministic even spread
+    (:func:`even_spread_stuck_at`, reproducible with no RNG — the traffic
+    harness relies on this for its bitwise single-caller replays);
+    an integer seed draws :func:`random_stuck_at` faults instead.
+    """
+    if seed is None:
+        masks = even_spread_stuck_at(cfg, fraction, stuck_value,
+                                     offset=offset)
+    else:
+        masks = random_stuck_at(cfg, fraction, stuck_value, seed)
+    return inject(rt, *masks)
+
+
 def inject(rt: TMRuntime, and_mask, or_mask) -> TMRuntime:
     """Write new fault mappings into the runtime (microcontroller write)."""
     return rt._replace(

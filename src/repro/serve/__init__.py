@@ -18,6 +18,16 @@ from repro.serve.service import (  # noqa: F401
     TickReport,
     TMService,
 )
+from repro.serve.traffic import (  # noqa: F401
+    SCENARIOS,
+    ProducerScript,
+    Scenario,
+    TrafficResult,
+    make_script,
+    make_scripts,
+    replay_single_caller,
+    run_threaded,
+)
 
 __all__ = [
     "AdaptPolicy",
@@ -27,12 +37,20 @@ __all__ = [
     "OnlineAdaptConfig",
     "OnlineAdaptManager",
     "OnlineFleet",
+    "ProducerScript",
+    "SCENARIOS",
+    "Scenario",
     "ServiceConfig",
     "TickReport",
     "TMFleetAdaptManager",
     "TMOnlineAdaptConfig",
     "TMOnlineAdaptManager",
     "TMService",
+    "TrafficResult",
+    "make_script",
+    "make_scripts",
+    "replay_single_caller",
+    "run_threaded",
 ]
 
 

@@ -12,14 +12,27 @@ offers/s over the looped per-point path at K = 8; far more in practice —
 the dispatch count drops by a factor of ``B_ingress``).
 
 Acceptance is decided host-side: the router carries an exact mirror of
-every replica's free buffer space (device size is only mutated by the
-owning :class:`~repro.serve.service.TMService`, which keeps the mirror in
-sync on drains and state swaps), so a ``submit`` can report backpressure
-synchronously — same observable semantics as the old immediate-dispatch
-``offer`` — while the device enqueue happens later, batched.
+every replica's outstanding datapoints (device occupancy + rows in
+flight to the device; only mutated by the owning
+:class:`~repro.serve.service.TMService`, which keeps the mirror in sync
+on drains, flushes and state swaps), so a ``submit`` can report
+backpressure synchronously — same observable semantics as the old
+immediate-dispatch ``offer`` — while the device enqueue happens later,
+batched.
+
+Concurrency (DESIGN.md §14): staging is DOUBLE-BUFFERED so producers and
+the flushing consumer never share an array. Two pre-allocated blocks
+alternate: producers fill the *active* block under :attr:`lock`, and
+``take_block`` *swaps* the blocks — the filled block becomes consumer
+property (stable until the consumer's transfer completes and the next
+swap hands it back), the spare becomes the new active block. Any number
+of producer threads may call ``stage_rows`` concurrently; ``take_block``
+assumes ONE consumer at a time (``TMService.flush`` serializes consumers
+behind the service's device lock).
 """
 from __future__ import annotations
 
+import threading
 from functools import partial
 from typing import Optional
 
@@ -58,22 +71,41 @@ def _enqueue_rows(ss, block: int, xs, ys, counts):
     return ss._replace(buf=bufs), accepted
 
 
+class _StageBlock:
+    """One staging block: [K, B] rows + per-replica fill counts."""
+
+    __slots__ = ("x", "y", "count")
+
+    def __init__(self, n_replicas: int, block: int, row_shape: tuple,
+                 dtype) -> None:
+        self.x = np.zeros((n_replicas, block) + row_shape, dtype=dtype)
+        self.y = np.zeros((n_replicas, block), dtype=np.int32)
+        self.count = np.zeros(n_replicas, dtype=np.int32)
+
+
 class BatchRouter:
     """Host-side staging queue between producers and the fleet's buffers.
 
     * ``stage_rows(xs, ys, mask, dev_size)`` — producer side: copy one row
-      per masked replica into the shared numpy block, deciding acceptance
-      against the free-space mirror (rejected rows are per-replica
+      per masked replica into the active staging block, deciding acceptance
+      against the outstanding-rows mirror (rejected rows are per-replica
       ``dropped`` backpressure events, exactly like the old per-point
-      ``offer``; a single-replica offer is a one-hot mask).
-    * ``take_block()`` — consumer side: hand the staged ``[K, B]`` block
-      (plus fill counts) to the service for one ``_enqueue_rows`` dispatch
-      and reset the staging counts.
+      ``offer``; a single-replica offer is a one-hot mask). Replicas whose
+      staging lane is full are returned as *blocked* — neither accepted nor
+      dropped; the caller flushes and retries them.
+    * ``take_block()`` — consumer side: swap the double-buffered blocks and
+      hand the filled ``[K, B]`` block (plus fill counts) to the service
+      for one ``_enqueue_rows`` dispatch. The returned arrays stay stable
+      while producers fill the other block; they are recycled at the
+      next-but-one ``take_block``, by which time the (single) consumer has
+      finished its transfer.
 
     The service flushes whenever any replica's staging lane fills, and
     before every drain/inference-independent consumer step — so a lane
     never overflows and no staged row is ever reordered within its
-    replica's stream.
+    replica's stream. :attr:`lock` (re-entrant) guards ALL producer-side
+    state: both blocks, the drop counter, and — by convention, see
+    DESIGN.md §14 — the owning service's occupancy mirror.
     """
 
     def __init__(self, n_replicas: int, n_features: int, capacity: int,
@@ -92,12 +124,13 @@ class BatchRouter:
             # enqueue is dtype-agnostic).
             from repro.kernels.packing import n_words
 
-            self._stage_x = np.zeros((K, self.block, n_words(n_features)),
-                                     dtype=np.uint32)
+            row_shape, dtype = (n_words(n_features),), np.uint32
         else:
-            self._stage_x = np.zeros((K, self.block, n_features), dtype=bool)
-        self._stage_y = np.zeros((K, self.block), dtype=np.int32)
-        self._count = np.zeros(K, dtype=np.int32)
+            row_shape, dtype = (n_features,), np.dtype(bool)
+        self._blocks = (_StageBlock(K, self.block, row_shape, dtype),
+                        _StageBlock(K, self.block, row_shape, dtype))
+        self._active = 0
+        self.lock = threading.RLock()
         self.dropped = np.zeros(K, dtype=np.int64)   # backpressure events
         self.flushes = 0                             # device dispatches
 
@@ -106,63 +139,101 @@ class BatchRouter:
     @property
     def staged(self) -> np.ndarray:
         """Rows staged but not yet flushed, per replica. [K] i32 (a copy)."""
-        return self._count.copy()
+        with self.lock:
+            return self._blocks[self._active].count.copy()
 
     def lane_full(self) -> bool:
         """True when some replica's staging lane is full (flush before the
-        next stage call, or it would have to reject for lack of lane space
-        rather than true buffer backpressure)."""
-        return bool((self._count >= self.block).any())
-
-    def stage_rows(self, xs, ys, mask, dev_size) -> np.ndarray:
-        """Stage one row per masked replica. Returns accepted [K] bool.
-
-        ``dev_size`` is the service's device-buffer-occupancy mirror;
-        acceptance is ``dev_size + staged < capacity``, which is exactly
-        what an immediate device push would have reported.
-        """
-        K, f = self.n_replicas, self.n_features
-        xs = np.asarray(xs, dtype=bool)
-        if xs.shape != (K, f):
-            xs = np.broadcast_to(xs, (K, f))
-        ys = np.asarray(ys, dtype=np.int32)
-        if ys.shape != (K,):
-            ys = np.broadcast_to(ys, (K,))
-        accepted = mask & (dev_size + self._count < self.capacity)
-        if (accepted & (self._count >= self.block)).any():
-            # Protocol error, not backpressure: the caller must flush a
-            # full lane before staging into it (TMService does this
-            # automatically around every stage call).
-            raise RuntimeError(
-                "BatchRouter staging lane full — take_block()/flush before "
-                "staging more rows into this replica"
+        next stage call, or it would block that replica's row for lack of
+        lane space rather than true buffer backpressure)."""
+        with self.lock:
+            return bool(
+                (self._blocks[self._active].count >= self.block).any()
             )
-        idx = np.nonzero(accepted)[0]
-        if idx.size:
-            c = self._count[idx]
-            if self.packed:
-                from repro.kernels.packing import pack_bits_np
 
-                # Rows pack here, at the staging boundary: everything
-                # downstream (staging block, flush, ring rows) is words.
-                self._stage_x[idx, c] = pack_bits_np(xs[idx])
-            else:
-                self._stage_x[idx, c] = xs[idx]
-            self._stage_y[idx, c] = ys[idx]
-            self._count[idx] += 1
-        self.dropped += mask & ~accepted
-        return accepted
+    def _route_rows(self, xs) -> tuple[np.ndarray, bool]:
+        """Dtype-route producer rows: bool rows pass (and later pack when
+        the router is packed); already-packed uint32 word rows pass through
+        on a packed router and are a hard error on an unpacked one (a
+        silent ``astype(bool)`` would mangle them). Returns
+        (rows broadcast to [K, width], already_packed?)."""
+        K = self.n_replicas
+        xs = np.asarray(xs)
+        if xs.dtype == np.uint32:
+            if not self.packed:
+                raise TypeError(
+                    "uint32 rows look bit-packed (DESIGN.md §13) but this "
+                    "router stages unpacked bool rows — build the service "
+                    "with ServiceConfig(packed=True) or submit bool rows"
+                )
+            from repro.kernels.packing import n_words
+
+            W = n_words(self.n_features)
+            if xs.shape != (K, W):
+                xs = np.broadcast_to(xs, (K, W))
+            return xs, True
+        xs = xs.astype(bool)
+        if xs.shape != (K, self.n_features):
+            xs = np.broadcast_to(xs, (K, self.n_features))
+        return xs, False
+
+    def stage_rows(self, xs, ys, mask,
+                   dev_size) -> tuple[np.ndarray, np.ndarray]:
+        """Stage one row per masked replica. Returns (accepted, blocked),
+        both [K] bool.
+
+        ``dev_size`` is the service's outstanding-rows mirror (device
+        occupancy + in-flight flush rows); acceptance is
+        ``dev_size + staged < capacity``, which is exactly what an
+        immediate device push would have reported. A replica that has
+        buffer space but a FULL staging lane comes back ``blocked`` —
+        not a backpressure drop; the caller must flush and retry (under
+        concurrent producers a lane can fill between anyone's check and
+        stage, so this is an expected slow path, not a protocol error).
+        """
+        xs, already_packed = self._route_rows(xs)
+        ys = np.asarray(ys, dtype=np.int32)
+        if ys.shape != (self.n_replicas,):
+            ys = np.broadcast_to(ys, (self.n_replicas,))
+        with self.lock:
+            blk = self._blocks[self._active]
+            ok = mask & (dev_size + blk.count < self.capacity)
+            room = blk.count < self.block
+            accepted = ok & room
+            blocked = ok & ~room
+            idx = np.nonzero(accepted)[0]
+            if idx.size:
+                c = blk.count[idx]
+                if self.packed and not already_packed:
+                    from repro.kernels.packing import pack_bits_np
+
+                    # Rows pack here, at the staging boundary: everything
+                    # downstream (staging block, flush, ring rows) is words.
+                    blk.x[idx, c] = pack_bits_np(xs[idx])
+                else:
+                    blk.x[idx, c] = xs[idx]
+                blk.y[idx, c] = ys[idx]
+                blk.count[idx] += 1
+            self.dropped += mask & ~ok
+        return accepted, blocked
 
     # -- consumer side ------------------------------------------------------
 
     def take_block(self) -> Optional[tuple[np.ndarray, np.ndarray, np.ndarray]]:
-        """The staged (xs [K, B, f], ys [K, B], counts [K]) block, or None
-        when nothing is staged. Staging counts reset; the arrays are only
-        valid until the next stage call (the jitted enqueue copies them to
-        device immediately)."""
-        if not self._count.any():
-            return None
-        counts = self._count.copy()
-        self._count[:] = 0
-        self.flushes += 1
-        return self._stage_x, self._stage_y, counts
+        """Swap the staging blocks; returns the filled (xs [K, B, f],
+        ys [K, B], counts [K]) block, or None when nothing is staged.
+
+        Producers immediately continue into the fresh block; the returned
+        arrays are NOT written again until the next-but-one ``take_block``
+        (single consumer: by then its transfer is done). ``counts`` is a
+        copy — the caller owns it.
+        """
+        with self.lock:
+            blk = self._blocks[self._active]
+            if not blk.count.any():
+                return None
+            counts = blk.count.copy()
+            blk.count[:] = 0
+            self._active ^= 1
+            self.flushes += 1
+            return blk.x, blk.y, counts

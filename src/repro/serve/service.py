@@ -29,6 +29,7 @@ parity suite pins bitwise against the replicated path.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
@@ -162,6 +163,11 @@ class ServiceConfig:
     kernels. Served predictions, drained TA states and analysis
     accuracies are bit-identical to the unpacked path (which stays the
     parity oracle — pinned by tests/test_scale.py).
+
+    ``history_limit`` bounds the analysis ``history`` list to its most
+    recent N entries — a long-running service analyzing on cadence would
+    otherwise grow it without bound (a memory leak at traffic scale).
+    None keeps the legacy unbounded behavior.
     """
 
     replicas: int = 1
@@ -169,6 +175,7 @@ class ServiceConfig:
     chunk: int = 16                   # datapoints drained per jitted call
     ingress_block: int = 32           # staged rows per replica per flush
     packed: bool = False              # bit-packed datapath (DESIGN.md §13)
+    history_limit: Optional[int] = None   # analysis entries kept (None = all)
     s: Union[float, Sequence[float], None] = None
     T: Union[int, Sequence[int], None] = None
     policy: AdaptPolicy = dataclasses.field(default_factory=AdaptPolicy)
@@ -211,6 +218,17 @@ class TMService:
     overrides the runtime built from ``sc.s``/``sc.T`` (shims pass their
     caller's runtime through). ``eval_x``/``eval_y`` are the accuracy-
     analysis set; without them ``tick`` still drains but never analyzes.
+
+    Threading (DESIGN.md §14): ``submit``/``submit_rows`` are safe from
+    any number of producer threads — they touch only the router's
+    double-buffered staging state and the outstanding-rows mirror, both
+    guarded by ``router.lock``. Everything consumer-side (device state,
+    RNG keys, policy FSM, history, the runtime ``rt``) is serialized by
+    one re-entrant device lock taken by ``flush``/``drain``/``tick``/
+    ``serve``/``analyze``/``offline_train``; a producer only ever reaches
+    the device lock through ``flush`` when its staging lane fills
+    (lane-full backpressure blocks that producer until the consumer's
+    current step completes). Lock order is always device -> router.
     """
 
     def __init__(
@@ -224,6 +242,8 @@ class TMService:
         eval_y=None,
     ):
         sc = sc or ServiceConfig()
+        if sc.history_limit is not None and sc.history_limit < 1:
+            raise ValueError("history_limit must be >= 1 (or None)")
         replicated = state.ta_state.ndim == 4
         K = sc.replicas
         if replicated and state.ta_state.shape[0] != K:
@@ -286,7 +306,14 @@ class TMService:
             K, cfg.n_features, sc.buffer_capacity, sc.ingress_block,
             packed=sc.packed,
         )
-        self._dev_size = np.zeros(K, dtype=np.int64)  # buffer-occupancy mirror
+        # Outstanding-rows mirror: device buffer occupancy + rows in
+        # flight to the device (credited at block swap, rejects undone
+        # after the enqueue). Guarded by router.lock — the producer-side
+        # acceptance decision reads it together with the staging counts.
+        self._dev_size = np.zeros(K, dtype=np.int64)
+        # Consumer-side serialization (DESIGN.md §14). Re-entrant: drain
+        # flushes inside its own critical section.
+        self._device_lock = threading.RLock()
         self._full_mask = np.ones(K, dtype=bool)
         self._ps = sc.policy.init(K)
         # Like the pre-redesign managers: the initial TA banks are the
@@ -313,18 +340,21 @@ class TMService:
         """Device state, with staged ingress flushed first — so externally
         read (and read-modify-written) state always contains every accepted
         datapoint, exactly like the pre-staging immediate-enqueue API."""
-        self.flush()
-        return self._ss
+        with self._device_lock:
+            self.flush()
+            return self._ss
 
     @ss.setter
     def ss(self, value: SessionState):
         """Replacing device state wholesale re-syncs the occupancy mirror
         (benchmarks pre-fill buffers this way). Traffic staged but never
         read back via the getter still lands on the next flush."""
-        self._ss = value
-        self._dev_size = np.asarray(value.buf.size, dtype=np.int64).reshape(
-            self.n_replicas
-        ).copy()
+        with self._device_lock:
+            self._ss = value
+            with self.router.lock:
+                self._dev_size = np.asarray(
+                    value.buf.size, dtype=np.int64
+                ).reshape(self.n_replicas).copy()
 
     # -- ingress (producer side) --------------------------------------------
 
@@ -332,15 +362,26 @@ class TMService:
         """One labelled datapoint into every (masked) replica's stream;
         returns accepted [K] bool (False = backpressure, counted in
         ``dropped``). Host-side staging only — the device enqueue happens
-        on the next flush (a full staging lane flushes automatically)."""
-        mask = (self._full_mask if mask is None
-                else np.asarray(mask, dtype=bool))
-        if self.router.lane_full():
-            self.flush()
-        accepted = self.router.stage_rows(xs, ys, mask, self._dev_size)
-        if self.router.lane_full():
-            self.flush()
-        return accepted
+        on the next flush (a full staging lane flushes automatically).
+
+        Safe under concurrent producers: replicas whose lane filled while
+        this call raced another producer come back *blocked* from the
+        router, and the call flushes and retries them — blocked rows are
+        never silently dropped nor double-staged.
+        """
+        pending = (self._full_mask if mask is None
+                   else np.asarray(mask, dtype=bool))
+        accepted = np.zeros(self.n_replicas, dtype=bool)
+        while True:
+            ok, blocked = self.router.stage_rows(
+                xs, ys, pending, self._dev_size
+            )
+            accepted |= ok
+            if self.router.lane_full():
+                self.flush()
+            if not blocked.any():
+                return accepted
+            pending = blocked
 
     def submit(self, r: int, x, y) -> bool:
         """One labelled datapoint into replica ``r``'s stream."""
@@ -352,31 +393,47 @@ class TMService:
         """Push every staged row to the device buffers — ONE jitted
         ``_enqueue_rows`` dispatch per staged block. Returns [K] rows
         landed. Rows a buffer rejects despite the mirror (only possible
-        when device state was swapped mid-flight) count as dropped."""
+        when device state was swapped mid-flight) count as dropped.
+
+        The block swap and the mirror credit happen atomically under
+        ``router.lock`` (taken rows are *in flight*: no longer staged,
+        not yet device-visible — crediting them at swap time keeps every
+        outstanding row counted exactly once by concurrent acceptance
+        decisions); the device transfer itself runs outside that lock,
+        overlapping producers filling the other staging block.
+        """
         K = self.n_replicas
         landed = np.zeros(K, dtype=np.int64)
-        while True:
-            block = self.router.take_block()
-            if block is None:
-                return landed
-            xs, ys, counts = block
-            self._ss, accepted = router_mod._enqueue_rows(
-                self._ss, self.router.block, xs, ys, counts
-            )
-            acc = np.asarray(accepted, dtype=np.int64)
-            self._dev_size += acc
-            self.router.dropped += counts - acc
-            landed += acc
+        with self._device_lock:
+            while True:
+                with self.router.lock:
+                    block = self.router.take_block()
+                    if block is not None:
+                        self._dev_size += block[2]
+                if block is None:
+                    return landed
+                xs, ys, counts = block
+                self._ss, accepted = router_mod._enqueue_rows(
+                    self._ss, self.router.block, xs, ys, counts
+                )
+                acc = np.asarray(accepted, dtype=np.int64)
+                with self.router.lock:
+                    self._dev_size -= counts - acc
+                    self.router.dropped += counts - acc
+                landed += acc
 
     @property
     def buffered(self) -> np.ndarray:
-        """Datapoints awaiting consumption per replica (device + staged)."""
-        return self._dev_size + self.router.staged
+        """Datapoints awaiting consumption per replica (device + in-flight
+        + staged; read coherently under the router lock)."""
+        with self.router.lock:
+            return self._dev_size + self.router.staged
 
     @property
     def dropped(self) -> np.ndarray:
-        """Backpressure events per replica. [K] i64."""
-        return self.router.dropped
+        """Backpressure events per replica. [K] i64 (a copy)."""
+        with self.router.lock:
+            return self.router.dropped.copy()
 
     # -- consumer side ------------------------------------------------------
 
@@ -395,7 +452,6 @@ class TMService:
         replica axis ``[K, chunk]``; without it the monitoring contraction
         is compiled out entirely.
         """
-        self.flush()
         K = self.n_replicas
         budget = np.broadcast_to(
             np.asarray(max_points, dtype=np.int64), (K,)
@@ -403,8 +459,10 @@ class TMService:
         # the drain bodies keep the occupancy mirror in sync per chunk (not
         # here, after the fact) so an on_chunk callback raising mid-drain
         # can't desync accounting from the device
-        return (self._drain_k1(budget, on_chunk) if self._k1
-                else self._drain_replicated(budget, on_chunk))
+        with self._device_lock:
+            self.flush()
+            return (self._drain_k1(budget, on_chunk) if self._k1
+                    else self._drain_replicated(budget, on_chunk))
 
     def _drain_replicated(self, budget, on_chunk) -> np.ndarray:
         K = self.n_replicas
@@ -424,7 +482,8 @@ class TMService:
             )
             n = np.asarray(n, dtype=np.int64)
             trained += n
-            self._dev_size -= n
+            with self.router.lock:
+                self._dev_size -= n
             if monitor and n.any():
                 on_chunk(aux)
             active &= (n == want) & (trained < budget)
@@ -448,7 +507,8 @@ class TMService:
             trained += n
             # commit state + mirror before the callback (see drain())
             self._ss = jax.tree.map(lambda a: a[None], ss1)
-            self._dev_size[0] -= n
+            with self.router.lock:
+                self._dev_size[0] -= n
             if monitor and n:
                 on_chunk(jax.tree.map(lambda a: a[None], aux))
             if n < want:  # buffer drained before the budget ran out
@@ -465,16 +525,18 @@ class TMService:
         here and serve it through the AND+popcount kernels, bit-identically.
         """
         xs = self._ingest(xs)
-        if xs.ndim == 2 and self._k1:
-            tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
-            return np.asarray(
-                tm_mod.predict_batch(self.cfg, tm1, self.rt, xs)
-            )[None]
-        if xs.ndim == 2:
-            xs = xs[None]  # D = 1: one shared stream, factored (stored once)
-        return np.asarray(tm_mod.predict_batch_replicated(
-            self.cfg, self._ss.tm, self.rt, xs
-        ))
+        with self._device_lock:
+            if xs.ndim == 2 and self._k1:
+                tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+                return np.asarray(
+                    tm_mod.predict_batch(self.cfg, tm1, self.rt, xs)
+                )[None]
+            if xs.ndim == 2:
+                # D = 1: one shared stream, factored (stored once)
+                xs = xs[None]
+            return np.asarray(tm_mod.predict_batch_replicated(
+                self.cfg, self._ss.tm, self.rt, xs
+            ))
 
     # -- analysis + the Fig-3 policy loop -----------------------------------
 
@@ -482,18 +544,22 @@ class TMService:
         """Eval accuracy of every member in ONE contraction. [K] f32."""
         if self.eval_x is None:
             raise ValueError("TMService built without an eval set")
-        if self._k1:
-            tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
-            acc = np.asarray([float(acc_mod.analyze(
-                self.cfg, tm1, self.rt, self.eval_x, self.eval_y
-            ))], dtype=np.float32)   # same [K] f32 contract as the K > 1 path
-        else:
-            acc = np.asarray(acc_mod.analyze_replicated(
-                self.cfg, self._ss.tm, self.rt,
-                self.eval_x[None], self.eval_y[None],   # D = 1: stored once
-            ))
-        self.history.append((self.steps, acc))
-        return acc
+        with self._device_lock:
+            if self._k1:
+                tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+                # same [K] f32 contract as the K > 1 path
+                acc = np.asarray([float(acc_mod.analyze(
+                    self.cfg, tm1, self.rt, self.eval_x, self.eval_y
+                ))], dtype=np.float32)
+            else:
+                acc = np.asarray(acc_mod.analyze_replicated(
+                    self.cfg, self._ss.tm, self.rt,
+                    self.eval_x[None], self.eval_y[None],  # D = 1: shared
+                ))
+            self.history.append((self.steps, acc))
+            if self.sc.history_limit is not None:
+                del self.history[:-self.sc.history_limit]
+            return acc
 
     def offline_train(self, xs, ys, n_epochs: int = 10,
                       seed: int = 1) -> np.ndarray:
@@ -501,6 +567,10 @@ class TMService:
         the result becomes every member's known-good baseline."""
         xs = jnp.asarray(xs, dtype=bool)
         ys = jnp.asarray(ys, dtype=jnp.int32)
+        with self._device_lock:
+            return self._offline_train_locked(xs, ys, n_epochs, seed)
+
+    def _offline_train_locked(self, xs, ys, n_epochs, seed) -> np.ndarray:
         if self._k1:
             tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
             st = fb_mod.train_epochs(
@@ -541,9 +611,10 @@ class TMService:
         analysis cadence, and apply the mitigation policy to due members.
         """
         budget = self.chunk if max_points is None else max_points
-        trained = self.drain(budget, on_chunk)
-        self._ps.since += trained
-        out = self._maybe_analyze()
+        with self._device_lock:
+            trained = self.drain(budget, on_chunk)
+            self._ps.since += trained
+            out = self._maybe_analyze()
         if out is None:
             return TickReport(trained, None,
                               np.zeros(self.n_replicas, dtype=bool))
@@ -562,15 +633,16 @@ class TMService:
         K = self.n_replicas
         mask = (np.ones(K, dtype=bool) if mask is None
                 else np.asarray(mask, dtype=bool))
-        accepted = self.submit_rows(xs, ys, mask)
-        retry = mask & ~accepted
-        if retry.any():
-            # Backpressure: drain a chunk fleet-wide, then retry once.
+        with self._device_lock:
+            accepted = self.submit_rows(xs, ys, mask)
+            retry = mask & ~accepted
+            if retry.any():
+                # Backpressure: drain a chunk fleet-wide, then retry once.
+                self._ps.since += self.drain(self.chunk)
+                accepted = self.submit_rows(xs, ys, retry)
+                self._ps.lost += retry & ~accepted
             self._ps.since += self.drain(self.chunk)
-            accepted = self.submit_rows(xs, ys, retry)
-            self._ps.lost += retry & ~accepted
-        self._ps.since += self.drain(self.chunk)
-        out = self._maybe_analyze()
+            out = self._maybe_analyze()
         return None if out is None else out[0]
 
     # -- observability ------------------------------------------------------

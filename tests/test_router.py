@@ -224,6 +224,166 @@ def test_mirror_survives_on_chunk_exception():
     assert svc.drain(2 * CAP)[0] == CAP - consumed + 1
 
 
+def test_take_block_returns_stable_double_buffered_arrays():
+    """Regression (the tentpole's prerequisite bug): take_block used to
+    return the LIVE staging arrays and reset counts in place, so any stage
+    call racing a flush-in-progress wrote into the block being
+    transferred. With double buffering the taken block must stay frozen
+    while producers keep staging."""
+    from repro.serve.router import BatchRouter
+
+    r = BatchRouter(K, F, capacity=CAP, block=BLOCK)
+    dev = np.zeros(K, dtype=np.int64)
+    full = np.ones(K, dtype=bool)
+    for uid in (1, 2):
+        x, y = _row(uid)
+        acc, blocked = r.stage_rows(np.broadcast_to(x, (K, F)),
+                                    np.full(K, y), full, dev)
+        assert acc.all() and not blocked.any()
+    xs, ys, counts = r.take_block()
+    snap_x, snap_y = xs.copy(), ys.copy()
+    np.testing.assert_array_equal(counts, [2] * K)
+    # producers keep staging DURING the (simulated) transfer
+    for uid in (7, 8, 9):
+        x, y = _row(uid)
+        r.stage_rows(np.broadcast_to(x, (K, F)), np.full(K, y), full, dev)
+    np.testing.assert_array_equal(xs, snap_x)   # taken block untouched
+    np.testing.assert_array_equal(ys, snap_y)
+    # the swap alternates blocks: the next take hands over the new rows
+    xs2, _, counts2 = r.take_block()
+    np.testing.assert_array_equal(counts2, [3] * K)
+    assert _uid(xs2[0, 0]) == 7 and _uid(xs2[0, 2]) == 9
+
+
+if HAVE_HYPOTHESIS:
+    _stage_take_ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("stage"), st.integers(1, 2 ** K - 1)),
+            st.tuples(st.just("take"), st.just(0)),
+        ),
+        max_size=40,
+    )
+
+    @settings(max_examples=30, deadline=None)
+    @given(ops_seq=_stage_take_ops)
+    def test_router_stage_take_interleaving(ops_seq):
+        """Arbitrary stage/take interleavings through the double-buffered
+        blocks: per replica, the concatenation of taken blocks is exactly
+        the accepted rows in submission order — nothing lost, duplicated,
+        or reordered."""
+        from repro.serve.router import BatchRouter
+
+        r = BatchRouter(K, F, capacity=10 ** 6, block=BLOCK)
+        dev = np.zeros(K, dtype=np.int64)
+        staged = [[] for _ in range(K)]   # accepted, not yet taken
+        taken = [[] for _ in range(K)]
+        uid = 0
+        for op, arg in ops_seq:
+            if op == "stage":
+                uid += 1
+                x, y = _row(uid)
+                mask = np.array([(arg >> i) & 1 for i in range(K)],
+                                dtype=bool)
+                acc, blocked = r.stage_rows(
+                    np.broadcast_to(x, (K, F)), np.full(K, y), mask, dev
+                )
+                # lane-full replicas block (capacity is huge: never drop)
+                np.testing.assert_array_equal(acc | blocked, mask)
+                for i in np.nonzero(acc)[0]:
+                    staged[i].append(uid)
+            else:
+                blk = r.take_block()
+                if blk is None:
+                    assert not any(staged), "rows staged but take gave None"
+                    continue
+                xs, ys, counts = blk
+                for i in range(K):
+                    got = [_uid(xs[i, c]) for c in range(int(counts[i]))]
+                    taken[i].extend(got)
+                    assert staged[i][:len(got)] == got, (
+                        f"replica {i}: taken block out of order"
+                    )
+                    del staged[i][:len(got)]
+        while (blk := r.take_block()) is not None:
+            xs, ys, counts = blk
+            for i in range(K):
+                taken[i].extend(_uid(xs[i, c])
+                                for c in range(int(counts[i])))
+                del staged[i][:int(counts[i])]
+        assert not any(staged)   # conservation: everything staged came out
+
+
+def _make_packed_service(seed=0):
+    cfg = TMConfig(n_features=F, max_classes=3, max_clauses=16, n_states=16)
+    return TMService(cfg, init_state(cfg), ServiceConfig(
+        replicas=K, buffer_capacity=CAP, chunk=CHUNK, ingress_block=BLOCK,
+        s=3.0, T=15, seed=seed, packed=True,
+    ))
+
+
+def test_packed_submit_routes_prepacked_uint32_rows():
+    """On a packed service, already-packed uint32 word rows pass through
+    the staging boundary verbatim — previously `asarray(xs, dtype=bool)`
+    silently mangled them into all-ones rows."""
+    from repro.kernels.packing import pack_bits_np
+
+    svc_bool, svc_words = _make_packed_service(), _make_packed_service()
+    for uid in (5, 9, 1034):
+        x, y = _row(uid)
+        a = svc_bool.submit_rows(x, y)
+        b = svc_words.submit_rows(pack_bits_np(x[None])[0], y)
+        np.testing.assert_array_equal(a, b)
+    svc_bool.flush(), svc_words.flush()
+    for name in ("data_x", "data_y", "head", "size"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(svc_bool.ss.buf, name)),
+            np.asarray(getattr(svc_words.ss.buf, name)),
+        )
+    assert np.asarray(svc_words.ss.buf.data_x).dtype == np.uint32
+
+
+def test_unpacked_submit_rejects_uint32_rows():
+    """uint32 rows into an UNPACKED service are a hard error, not a
+    silent astype(bool) mangle."""
+    svc = _make_service()
+    x, y = _row(3)
+    packed_row = np.zeros(1, dtype=np.uint32)
+    packed_row[0] = 3
+    with pytest.raises(TypeError, match="packed"):
+        svc.submit_rows(packed_row, y)
+    np.testing.assert_array_equal(svc.buffered, [0] * K)   # nothing staged
+    assert svc.submit_rows(x, y).all()                     # bool path fine
+
+
+def test_service_history_limit_bounds_growth():
+    """A long-running service's analysis history is a memory leak at
+    traffic scale; history_limit keeps only the most recent entries."""
+    cfg = TMConfig(n_features=F, max_classes=3, max_clauses=16, n_states=16)
+    from repro.data import iris  # noqa: F401  (not needed; uid rows do)
+
+    xs = np.stack([_row(i + 1)[0] for i in range(8)])
+    ys = np.asarray([_row(i + 1)[1] for i in range(8)], dtype=np.int32)
+
+    def build(limit):
+        return TMService(cfg, init_state(cfg), ServiceConfig(
+            replicas=K, buffer_capacity=CAP, chunk=CHUNK, s=3.0, T=15,
+            history_limit=limit,
+        ), eval_x=xs, eval_y=ys)
+
+    unbounded, bounded = build(None), build(3)
+    for _ in range(7):
+        unbounded.analyze(), bounded.analyze()
+    assert len(unbounded.history) == 7          # legacy behavior
+    assert len(bounded.history) == 3            # bounded at the knob
+    # the kept entries are the most recent ones, still in order
+    for (s_u, a_u), (s_b, a_b) in zip(unbounded.history[-3:],
+                                      bounded.history):
+        np.testing.assert_array_equal(s_u, s_b)
+        np.testing.assert_array_equal(a_u, a_b)
+    with pytest.raises(ValueError, match="history_limit"):
+        build(0)
+
+
 def test_service_config_validates_port_lengths():
     """Per-replica s/T sequences must match `replicas` at construction,
     like the seed check — not fail deep in the first drained kernel."""
