@@ -61,6 +61,29 @@ def replica_gate(valid: jax.Array):
     return apply
 
 
+def gather_replicas(tree, idx):
+    """Rows ``idx`` of every replica-leading leaf, as HOST numpy.
+
+    The residency layer's evict path: pull the named device-plane slots
+    into one stacked host tree (``[len(idx), ...]`` per leaf) with a
+    single device round-trip per leaf.
+    """
+    idx = np.asarray(idx)
+    return jax.tree.map(lambda a: np.asarray(a[idx]), tree)
+
+
+def scatter_replicas(tree, idx, values):
+    """Write stacked ``values`` (leading ``len(idx)``) into rows ``idx``
+    of every replica-leading leaf. The residency layer's activate path;
+    dtypes are pinned to the destination leaf (int8 TA banks, uint32
+    packed words and bool rows survive the host round-trip bit for bit).
+    """
+    idx = jnp.asarray(idx)
+    return jax.tree.map(
+        lambda a, v: a.at[idx].set(jnp.asarray(v, a.dtype)), tree, values
+    )
+
+
 @partial(jax.jit, static_argnums=(0, 1), static_argnames=("monitor",))
 def _consume_many_replicated(
     cfg: TMConfig,

@@ -13,6 +13,7 @@ production sharding pass must do rather than crash.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -161,8 +162,20 @@ def replica_shardings(
     stream is replicated onto all devices, so the kernels' ``r % D`` gather
     never crosses a device boundary. Without it (legacy behaviour) any
     divisible leading dim shards, which scatters the D streams away from
-    the replicas that read them.
+    the replicas that read them — that call form is DEPRECATED and warns;
+    every in-repo caller (the sweep engine, the serving fleet, the
+    residency plane) pins ``n_replicas`` explicitly.
     """
+    if n_replicas is None:
+        warnings.warn(
+            "replica_shardings(n_replicas=None) shards ANY divisible "
+            "leading dim, scattering D | R data-stream leaves away from "
+            "the replicas that read them (cross-device r % D gathers). "
+            "Pass n_replicas explicitly so only the full-R grid-major "
+            "axis shards.",
+            DeprecationWarning,
+            stacklevel=2,
+        )
     present = _mesh_axes_present(mesh, axes)
     group = int(np.prod([mesh.shape[a] for a in present])) if present else 1
     spec_axes = present if len(present) > 1 else (present[0] if present else None)

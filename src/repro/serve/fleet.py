@@ -136,6 +136,23 @@ class OnlineFleet:
         trained. See :meth:`TMService.drain`."""
         return self._svc.drain(max_points, on_chunk)
 
+    # -- durable state ------------------------------------------------------
+
+    def save(self, directory: str, *, step: Optional[int] = None,
+             keep: int = 3) -> str:
+        """Checkpoint the whole fleet (see :meth:`TMService.save`)."""
+        return self._svc.save(directory, step=step, keep=keep)
+
+    @classmethod
+    def restore(cls, directory: str, *, step: Optional[int] = None,
+                mesh: Optional[Mesh] = None) -> "OnlineFleet":
+        """Rebuild a fleet from a :meth:`save` checkpoint — construction
+        knobs from the manifest, arrays from the npz; continuation is
+        bitwise identical to never stopping (tests/test_residency.py)."""
+        return cls._from_service(
+            TMService.restore(directory, step=step, mesh=mesh)
+        )
+
     # -- inference ----------------------------------------------------------
 
     def infer(self, xs) -> np.ndarray:

@@ -46,7 +46,9 @@ from repro.core.tm import TMConfig, TMRuntime, TMState, init_runtime
 from repro.data import buffer as buf_mod
 from repro.distributed import sharding as shard_mod
 from repro.kernels import packing
+from repro.serve import residency as res_mod
 from repro.serve import router as router_mod
+from repro.train import checkpoint as ckpt_mod
 
 
 @jax.jit
@@ -129,7 +131,16 @@ class AdaptPolicy:
             ps.rollbacks += collapse
         if improve.any():
             ps.best = np.where(improve, acc, ps.best)
-            ps.best_state = _select_replicas(improve, tm, ps.best_state)
+            # The very first improve is an UNCONDITIONAL snapshot:
+            # ``init()`` leaves best_state None (there is no known-good
+            # bank before the first analysis or offline_train), and
+            # _select_replicas on a None pytree is a structure-mismatch
+            # crash. Taking ``tm`` wholesale is safe for the replicas not
+            # improving here: their ``best`` stays nan, so their slice of
+            # the snapshot is unreachable (collapse requires have_best)
+            # until their own first improve overwrites it.
+            ps.best_state = (tm if ps.best_state is None
+                             else _select_replicas(improve, tm, ps.best_state))
         return tm, collapse
 
     def snapshot(self, ps: _PolicyState, acc: np.ndarray, tm: TMState):
@@ -168,6 +179,16 @@ class ServiceConfig:
     recent N entries — a long-running service analyzing on cadence would
     otherwise grow it without bound (a memory leak at traffic scale).
     None keeps the legacy unbounded behavior.
+
+    ``resident`` caps how many replicas hold DEVICE state at once
+    (DESIGN.md §15): the device plane shrinks to ``[resident, ...]``
+    slots and the other ``K - resident`` machines live as host-side LRU
+    snapshots (:mod:`repro.serve.residency`), activated transparently
+    when traffic, inference or analysis touches them. This is the
+    thousand-replica knob — K=4096 personalization fleets on a 4-device
+    mesh with bounded device memory. None (default) keeps every replica
+    resident. Requires scalar ``s``/``T`` (a slot's runtime ports must
+    not change meaning with the replica occupying it).
     """
 
     replicas: int = 1
@@ -176,6 +197,7 @@ class ServiceConfig:
     ingress_block: int = 32           # staged rows per replica per flush
     packed: bool = False              # bit-packed datapath (DESIGN.md §13)
     history_limit: Optional[int] = None   # analysis entries kept (None = all)
+    resident: Optional[int] = None    # device slots (None = all K resident)
     s: Union[float, Sequence[float], None] = None
     T: Union[int, Sequence[int], None] = None
     policy: AdaptPolicy = dataclasses.field(default_factory=AdaptPolicy)
@@ -251,18 +273,27 @@ class TMService:
                 f"state carries {state.ta_state.shape[0]} replicas, "
                 f"expected {K}"
             )
-        if not replicated:
-            state = TMState(ta_state=jnp.broadcast_to(
-                state.ta_state, (K,) + state.ta_state.shape
-            ))
+        residency = sc.resident is not None and sc.resident < K
+        if sc.resident is not None and sc.resident < 1:
+            raise ValueError("resident must be >= 1 (or None)")
+        # P: the device-plane length — R slots under residency, else K.
+        P = int(sc.resident) if residency else K
 
         self.cfg = cfg
         self.sc = sc
         self.rt = rt if rt is not None else sc.runtime(cfg)
         self.n_replicas = K
+        self.n_resident = P
         self.chunk = max(1, min(sc.chunk, sc.buffer_capacity))
         self.mesh = sc.mesh
         self.policy = sc.policy
+        if residency and (jnp.ndim(self.rt.s) != 0
+                          or jnp.ndim(self.rt.T) != 0):
+            raise ValueError(
+                "residency (resident < replicas) requires scalar s/T "
+                "runtime ports — a slot's hyperparameters must not "
+                "change with the replica occupying it"
+            )
         # Packed services hold the eval set as words too: every analysis
         # pass then rides the packed kernels (dtype routing in the core).
         self.eval_x = None if eval_x is None else self._ingest(eval_x)
@@ -285,23 +316,45 @@ class TMService:
             if len(seed) != K:
                 raise ValueError(f"need {K} seeds, got {len(seed)}")
             keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seed])
-        self._keys = keys                                  # [K, key]
 
         buf1 = buf_mod.make(sc.buffer_capacity, cfg.n_features,
                             packed=sc.packed)
+        plane_tm = (TMState(ta_state=state.ta_state[:P]) if replicated
+                    else TMState(ta_state=jnp.broadcast_to(
+                        state.ta_state, (P,) + state.ta_state.shape)))
         bufs = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (K,) + a.shape), buf1
+            lambda a: jnp.broadcast_to(a, (P,) + a.shape), buf1
         )
         self._ss = SessionState(
-            tm=state, buf=bufs, step=jnp.zeros((K,), jnp.int32)
+            tm=plane_tm, buf=bufs, step=jnp.zeros((P,), jnp.int32)
         )
+        self._keys = keys if not residency else keys[:P]   # [P, key]
         if self.mesh is not None:
             sh = shard_mod.replica_shardings(
-                (self._ss, self._keys), self.mesh, n_replicas=K
+                (self._ss, self._keys), self.mesh, n_replicas=P
             )
             self._ss, self._keys = jax.tree.map(
                 jax.device_put, (self._ss, self._keys), sh
             )
+        # Residency (DESIGN.md §15): replicas 0..P-1 start in the device
+        # slots; the rest spill as host snapshots sharing the broadcast
+        # initial bank / empty buffer (snapshots are immutable in the
+        # store, so sharing is safe).
+        self._res: Optional[res_mod.ResidencyMap] = None
+        self._best_host: Optional[np.ndarray] = None  # [K, C, J, L] banks
+        if residency:
+            self._res = res_mod.ResidencyMap(K, P)
+            self._res.assign(np.arange(P), np.arange(P))
+            keys_host = np.asarray(keys)
+            buf_host = jax.tree.map(np.asarray, buf1)
+            banks_host = np.asarray(state.ta_state)
+            for rid in range(P, K):
+                bank = banks_host[rid] if replicated else banks_host
+                self._res.store[rid] = (
+                    SessionState(tm=TMState(ta_state=bank), buf=buf_host,
+                                 step=np.int32(0)),
+                    keys_host[rid],
+                )
         self.router = router_mod.BatchRouter(
             K, cfg.n_features, sc.buffer_capacity, sc.ingress_block,
             packed=sc.packed,
@@ -315,11 +368,11 @@ class TMService:
         # flushes inside its own critical section.
         self._device_lock = threading.RLock()
         self._full_mask = np.ones(K, dtype=bool)
+        # best_state starts None: there is no known-good bank before the
+        # first analysis/offline_train — the policy's first improve
+        # snapshots unconditionally (the old init-state pre-seed hid an
+        # AdaptPolicy.apply crash on standalone-initialized policies).
         self._ps = sc.policy.init(K)
-        # Like the pre-redesign managers: the initial TA banks are the
-        # known-good snapshot until an analysis/offline_train replaces it
-        # (best stays nan, so the first due analysis can only improve).
-        self._ps.best_state = self._ss.tm
         self.history: list = []            # (steps [K], accuracies [K])
 
     def _ingest(self, xs) -> jax.Array:
@@ -339,10 +392,16 @@ class TMService:
     def ss(self) -> SessionState:
         """Device state, with staged ingress flushed first — so externally
         read (and read-modify-written) state always contains every accepted
-        datapoint, exactly like the pre-staging immediate-enqueue API."""
+        datapoint, exactly like the pre-staging immediate-enqueue API.
+        Under residency this is the ASSEMBLED full-K logical fleet (device
+        slots gathered + spilled snapshots) — a read-only view; use
+        save/restore or evict/activate to move state."""
         with self._device_lock:
             self.flush()
-            return self._ss
+            if self._res is None:
+                return self._ss
+            ss_K, _ = self._assemble_plane()
+            return jax.tree.map(jnp.asarray, ss_K)
 
     @ss.setter
     def ss(self, value: SessionState):
@@ -350,11 +409,35 @@ class TMService:
         (benchmarks pre-fill buffers this way). Traffic staged but never
         read back via the getter still lands on the next flush."""
         with self._device_lock:
+            if self._res is not None:
+                raise ValueError(
+                    "a residency service's device plane cannot be "
+                    "swapped wholesale; use restore() for bulk state"
+                )
             self._ss = value
             with self.router.lock:
                 self._dev_size = np.asarray(
                     value.buf.size, dtype=np.int64
                 ).reshape(self.n_replicas).copy()
+
+    def _assemble_plane(self) -> tuple[SessionState, np.ndarray]:
+        """The full-K logical (SessionState, keys) as HOST numpy — device
+        rows gathered into replica order, spilled snapshots filled in."""
+        host = jax.tree.map(np.asarray, (self._ss, self._keys))
+        if self._res is None:
+            return host
+        K = self.n_replicas
+        flat_p, treedef = jax.tree_util.tree_flatten(host)
+        outs = [np.zeros((K,) + l.shape[1:], l.dtype) for l in flat_p]
+        m = self._res.replica_of >= 0
+        rids = self._res.replica_of[m]
+        for o, l in zip(outs, flat_p):
+            o[rids] = l[m]
+        for rid, snap in self._res.store.items():
+            flat_s, _ = jax.tree_util.tree_flatten(snap)
+            for o, l in zip(outs, flat_s):
+                o[rid] = l
+        return jax.tree_util.tree_unflatten(treedef, outs)
 
     # -- ingress (producer side) --------------------------------------------
 
@@ -412,15 +495,138 @@ class TMService:
                         self._dev_size += block[2]
                 if block is None:
                     return landed
-                xs, ys, counts = block
-                self._ss, accepted = router_mod._enqueue_rows(
-                    self._ss, self.router.block, xs, ys, counts
+                landed += (self._flush_block(*block) if self._res is None
+                           else self._flush_block_residency(*block))
+
+    def _flush_block(self, xs, ys, counts) -> np.ndarray:
+        """One taken [K, B] staging block -> one enqueue dispatch."""
+        self._ss, accepted = router_mod._enqueue_rows(
+            self._ss, self.router.block, xs, ys, counts
+        )
+        acc = np.asarray(accepted, dtype=np.int64)
+        with self.router.lock:
+            self._dev_size -= counts - acc
+            self.router.dropped += counts - acc
+        return acc
+
+    def _flush_block_residency(self, xs, ys, counts) -> np.ndarray:
+        """One taken [K, B] block under residency: lanes with traffic are
+        activated (LRU-evicting as needed) in cohorts of <= resident, and
+        each cohort lands via one [R]-plane enqueue dispatch with the lane
+        rows scattered to their replicas' slots."""
+        K, R = self.n_replicas, self.n_resident
+        landed = np.zeros(K, dtype=np.int64)
+        lanes = np.nonzero(np.asarray(counts) > 0)[0]
+        for i in range(0, len(lanes), R):
+            cohort = lanes[i:i + R]
+            slots = self._ensure_resident(cohort)
+            xs_p = np.zeros((R,) + xs.shape[1:], dtype=xs.dtype)
+            ys_p = np.zeros((R,) + ys.shape[1:], dtype=ys.dtype)
+            cnt_p = np.zeros((R,), dtype=counts.dtype)
+            xs_p[slots] = xs[cohort]
+            ys_p[slots] = ys[cohort]
+            cnt_p[slots] = counts[cohort]
+            self._ss, accepted = router_mod._enqueue_rows(
+                self._ss, self.router.block, xs_p, ys_p, cnt_p
+            )
+            acc = np.asarray(accepted, dtype=np.int64)[slots]
+            rej = np.asarray(counts[cohort], dtype=np.int64) - acc
+            with self.router.lock:
+                self._dev_size[cohort] -= rej
+                self.router.dropped[cohort] += rej
+            landed[cohort] += acc
+        return landed
+
+    # -- residency (DESIGN.md §15) ------------------------------------------
+
+    @property
+    def resident(self) -> np.ndarray:
+        """[K] bool — replicas holding device state right now (all True
+        on a service without a residency layer)."""
+        if self._res is None:
+            return np.ones(self.n_replicas, dtype=bool)
+        return self._res.resident_mask.copy()
+
+    def _ensure_resident(self, rids) -> np.ndarray:
+        """Device slots for the named replicas, activating evicted ones
+        (spilling LRU residents to make room). Callers hold the device
+        lock; a cohort is at most ``n_resident`` distinct replicas."""
+        res = self._res
+        rids = np.asarray(rids, dtype=np.int64).reshape(-1)
+        if len(rids) > self.n_resident:
+            raise ValueError(
+                f"cohort of {len(rids)} replicas exceeds the "
+                f"{self.n_resident} device slots"
+            )
+        if len(np.unique(rids)) != len(rids):
+            raise ValueError("duplicate replicas in a residency cohort")
+        need = rids[res.slot_of[rids] < 0]
+        if len(need):
+            free = res.free_slots()
+            take = list(free[:len(need)])
+            short = len(need) - len(take)
+            if short > 0:
+                pinned = res.slot_of[rids]
+                victims = res.lru_victims(short, pinned[pinned >= 0])
+                self._spill(victims)
+                take += list(victims)
+            self._activate(need, np.asarray(take[:len(need)],
+                                            dtype=np.int64))
+        slots = res.slot_of[rids]
+        res.touch(slots)
+        return slots
+
+    def _spill(self, slots) -> None:
+        """Evict the replicas in the given slots: one device->host gather,
+        complete per-machine snapshots into the LRU store."""
+        slots = np.asarray(slots, dtype=np.int64)
+        if len(slots) == 0:
+            return
+        vals = online_mod.gather_replicas((self._ss, self._keys), slots)
+        rids = self._res.release(slots)
+        for j, rid in enumerate(rids):
+            self._res.store[int(rid)] = jax.tree.map(lambda a: a[j], vals)
+
+    def _activate(self, rids, slots) -> None:
+        """Load the named (evicted) replicas' snapshots into free slots:
+        one host->device scatter per cohort."""
+        snaps = [self._res.store.pop(int(r)) for r in rids]
+        vals = jax.tree.map(lambda *xs: np.stack(xs), *snaps)
+        plane = online_mod.scatter_replicas(
+            (self._ss, self._keys), slots, vals
+        )
+        if self.mesh is not None:
+            sh = shard_mod.replica_shardings(
+                plane, self.mesh, n_replicas=self.n_resident
+            )
+            plane = jax.tree.map(jax.device_put, plane, sh)
+        self._ss, self._keys = plane
+        self._res.assign(np.asarray(rids, dtype=np.int64), slots)
+
+    def evict(self, replicas) -> None:
+        """Spill the named replicas to the host store. Their staged
+        ingress flushes first (rows land in the snapshot's ring, nothing
+        is lost); any later submit/serve/analysis touching them
+        re-activates transparently."""
+        with self._device_lock:
+            if self._res is None:
+                raise ValueError(
+                    "service has no residency layer (resident is None)"
                 )
-                acc = np.asarray(accepted, dtype=np.int64)
-                with self.router.lock:
-                    self._dev_size -= counts - acc
-                    self.router.dropped += counts - acc
-                landed += acc
+            self.flush()
+            rids = np.asarray(replicas, dtype=np.int64).reshape(-1)
+            slots = self._res.slot_of[rids]
+            self._spill(np.unique(slots[slots >= 0]))
+
+    def activate(self, replicas) -> np.ndarray:
+        """Make the named replicas device-resident (at most ``resident``
+        of them); returns their slots."""
+        with self._device_lock:
+            if self._res is None:
+                raise ValueError(
+                    "service has no residency layer (resident is None)"
+                )
+            return self._ensure_resident(replicas)
 
     @property
     def buffered(self) -> np.ndarray:
@@ -461,11 +667,32 @@ class TMService:
         # can't desync accounting from the device
         with self._device_lock:
             self.flush()
-            return (self._drain_k1(budget, on_chunk) if self._k1
-                    else self._drain_replicated(budget, on_chunk))
+            if self._res is None:
+                return (self._drain_k1(budget, on_chunk) if self._k1
+                        else self._drain_replicated(budget, on_chunk))
+            # Residency: sweep EVERY replica holding buffered rows (and
+            # budget) in cohorts of <= resident slots — no lane starves
+            # behind the working set, and sparse traffic only ever
+            # activates its own users. A replica with budget but no
+            # buffered rows is skipped entirely, so its RNG key does not
+            # split; the always-resident twin property therefore masks
+            # budgets by ``buffered > 0`` (tests/test_residency.py).
+            trained = np.zeros(K, dtype=np.int64)
+            with self.router.lock:
+                has_rows = self._dev_size > 0
+            todo = np.nonzero(has_rows & (budget > 0))[0]
+            R = self.n_resident
+            for i in range(0, len(todo), R):
+                cohort = todo[i:i + R]
+                slots = self._ensure_resident(cohort)
+                budget_p = np.zeros(R, dtype=np.int64)
+                budget_p[slots] = budget[cohort]
+                trained_p = self._drain_replicated(budget_p, on_chunk)
+                trained[cohort] = trained_p[slots]
+            return trained
 
     def _drain_replicated(self, budget, on_chunk) -> np.ndarray:
-        K = self.n_replicas
+        K = len(budget)   # the device-plane length (= slots, not fleet K)
         trained = np.zeros(K, dtype=np.int64)
         active = trained < budget
         monitor = on_chunk is not None
@@ -483,11 +710,21 @@ class TMService:
             n = np.asarray(n, dtype=np.int64)
             trained += n
             with self.router.lock:
-                self._dev_size -= n
+                self._debit_mirror(n)
             if monitor and n.any():
                 on_chunk(aux)
             active &= (n == want) & (trained < budget)
         return trained
+
+    def _debit_mirror(self, n_plane) -> None:
+        """Map a device-plane consumed-rows vector onto the [K] mirror
+        (identity without residency). Callers hold the router lock."""
+        if self._res is None:
+            self._dev_size -= n_plane
+        else:
+            m = self._res.replica_of >= 0
+            np.subtract.at(self._dev_size, self._res.replica_of[m],
+                           n_plane[m])
 
     def _drain_k1(self, budget, on_chunk) -> np.ndarray:
         """The specialized single-machine drain body on the K = 1 slice."""
@@ -523,9 +760,18 @@ class TMService:
         ``xs`` is [B, f] (the same batch served by all members) or
         [K, B, f] (one batch per member). Packed services pack the batch
         here and serve it through the AND+popcount kernels, bit-identically.
+
+        A residency service cannot serve the whole fleet in one
+        contraction (only ``resident`` machines are on device) — use
+        :meth:`serve_replicas` to name the members a request targets.
         """
         xs = self._ingest(xs)
         with self._device_lock:
+            if self._res is not None:
+                raise ValueError(
+                    "a residency service serves named replicas: use "
+                    "serve_replicas(replicas, xs)"
+                )
             if xs.ndim == 2 and self._k1:
                 tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
                 return np.asarray(
@@ -538,28 +784,71 @@ class TMService:
                 self.cfg, self._ss.tm, self.rt, xs
             ))
 
+    def serve_replicas(self, replicas, xs) -> np.ndarray:
+        """Inference for the NAMED replicas only: [n, B] predictions.
+
+        ``xs`` is [B, f] (one batch shared by the named members) or
+        [n, B, f] (one per member). Under residency, evicted members are
+        activated in cohorts of at most ``resident`` (LRU-spilling as
+        needed), so a K=4096 fleet serves any subset on bounded device
+        memory; predictions are bit-identical to an always-resident
+        fleet's (prediction never touches the s/T ports, so the gathered
+        sub-plane contraction is exact).
+        """
+        xs = self._ingest(xs)
+        rids = np.asarray(replicas, dtype=np.int64).reshape(-1)
+        shared = xs.ndim == 2
+        cap = self.n_resident
+        outs = []
+        with self._device_lock:
+            for i in range(0, len(rids), cap):
+                cohort = rids[i:i + cap]
+                slots = (cohort if self._res is None
+                         else self._ensure_resident(cohort))
+                tm_c = jax.tree.map(lambda a: a[jnp.asarray(slots)],
+                                    self._ss.tm)
+                xs_c = xs[None] if shared else xs[i:i + cap]
+                outs.append(np.asarray(tm_mod.predict_batch_replicated(
+                    self.cfg, tm_c, self.rt, xs_c
+                )))
+        return np.concatenate(outs, axis=0)
+
     # -- analysis + the Fig-3 policy loop -----------------------------------
 
     def analyze(self) -> np.ndarray:
-        """Eval accuracy of every member in ONE contraction. [K] f32."""
+        """Eval accuracy of every member in ONE contraction. [K] f32.
+
+        Under residency only the device-resident members measure; evicted
+        members read nan (``activate`` them first for a full sweep — the
+        policy loop does exactly that for its due members)."""
         if self.eval_x is None:
             raise ValueError("TMService built without an eval set")
         with self._device_lock:
-            if self._k1:
-                tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
-                # same [K] f32 contract as the K > 1 path
-                acc = np.asarray([float(acc_mod.analyze(
-                    self.cfg, tm1, self.rt, self.eval_x, self.eval_y
-                ))], dtype=np.float32)
-            else:
-                acc = np.asarray(acc_mod.analyze_replicated(
-                    self.cfg, self._ss.tm, self.rt,
-                    self.eval_x[None], self.eval_y[None],  # D = 1: shared
-                ))
+            acc = self._measure()
             self.history.append((self.steps, acc))
             if self.sc.history_limit is not None:
                 del self.history[:-self.sc.history_limit]
             return acc
+
+    def _measure(self) -> np.ndarray:
+        """One eval contraction over the device plane; [K] f32 (nan for
+        evicted replicas). No history side effects."""
+        if self._k1:
+            tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+            # same [K] f32 contract as the K > 1 path
+            return np.asarray([float(acc_mod.analyze(
+                self.cfg, tm1, self.rt, self.eval_x, self.eval_y
+            ))], dtype=np.float32)
+        acc_p = np.asarray(acc_mod.analyze_replicated(
+            self.cfg, self._ss.tm, self.rt,
+            self.eval_x[None], self.eval_y[None],  # D = 1: shared
+        ))
+        if self._res is None:
+            return acc_p
+        acc = np.full(self.n_replicas, np.nan, dtype=np.float32)
+        m = self._res.replica_of >= 0
+        acc[self._res.replica_of[m]] = acc_p[m]
+        return acc
 
     def offline_train(self, xs, ys, n_epochs: int = 10,
                       seed: int = 1) -> np.ndarray:
@@ -568,6 +857,13 @@ class TMService:
         xs = jnp.asarray(xs, dtype=bool)
         ys = jnp.asarray(ys, dtype=jnp.int32)
         with self._device_lock:
+            if self._res is not None:
+                raise ValueError(
+                    "offline_train needs the full fleet device-resident; "
+                    "train a full-resident service (or a single machine) "
+                    "first, then construct the residency service from its "
+                    "state"
+                )
             return self._offline_train_locked(xs, ys, n_epochs, seed)
 
     def _offline_train_locked(self, xs, ys, n_epochs, seed) -> np.ndarray:
@@ -596,10 +892,81 @@ class TMService:
         due = self.policy.due(self._ps)
         if not due.any():
             return None
+        if self._res is not None:
+            return self._analyze_residency(due)
         acc = self.analyze()
         tm, rolled = self.policy.apply(self._ps, due, acc, self._ss.tm)
         self._ss = self._ss._replace(tm=tm)
         return acc, rolled
+
+    def _analyze_residency(self, due) -> tuple[np.ndarray, np.ndarray]:
+        """The §5.3.2 transition under residency: measure the due members
+        (activating evicted ones cohort by cohort), append ONE history
+        entry, then run the policy FSM with the known-good banks living
+        host-side (one [K, ...] numpy array — ``_best_host`` — instead of
+        a device-resident snapshot tree)."""
+        acc = self._measure()
+        missing = due & np.isnan(acc)
+        while missing.any():
+            ids = np.nonzero(missing)[0][: self.n_resident]
+            self._ensure_resident(ids)
+            fresh = self._measure()
+            acc = np.where(np.isnan(acc), fresh, acc).astype(np.float32)
+            missing = due & np.isnan(acc)
+        self.history.append((self.steps, acc))
+        if self.sc.history_limit is not None:
+            del self.history[:-self.sc.history_limit]
+        rolled = self._policy_apply_residency(due, acc)
+        return acc, rolled
+
+    def _policy_apply_residency(self, due, acc) -> np.ndarray:
+        """AdaptPolicy.apply's FSM on host-side known-good banks. The
+        transition rules are identical (same since/best/collapse/improve
+        algebra on the [K] arrays); only the snapshot storage differs —
+        scatters into ``_best_host`` on improve, per-replica bank writes
+        (device slot or spilled snapshot) on collapse."""
+        ps, pol = self._ps, self.policy
+        ps.since[due] = 0
+        measured = due & ~np.isnan(acc)
+        have_best = ~np.isnan(ps.best)
+        collapse = measured & have_best & (
+            acc < ps.best - pol.rollback_threshold)
+        improve = measured & (~have_best | (acc > ps.best))
+        if collapse.any():
+            for rid in np.nonzero(collapse)[0]:
+                self._write_bank(int(rid), self._best_host[rid])
+            ps.rollbacks += collapse
+        if improve.any():
+            if self._best_host is None:
+                ta = self._ss.tm.ta_state
+                self._best_host = np.zeros(
+                    (self.n_replicas,) + tuple(ta.shape[1:]),
+                    dtype=np.dtype(ta.dtype),
+                )
+            for rid in np.nonzero(improve)[0]:
+                self._best_host[rid] = self._read_bank(int(rid))
+            ps.best = np.where(improve, acc, ps.best)
+        return collapse
+
+    def _read_bank(self, rid: int) -> np.ndarray:
+        slot = int(self._res.slot_of[rid])
+        if slot >= 0:
+            return np.asarray(self._ss.tm.ta_state[slot])
+        return np.asarray(self._res.store[rid][0].tm.ta_state)
+
+    def _write_bank(self, rid: int, bank) -> None:
+        slot = int(self._res.slot_of[rid])
+        if slot >= 0:
+            ta = self._ss.tm.ta_state
+            self._ss = self._ss._replace(tm=TMState(
+                ta_state=ta.at[slot].set(jnp.asarray(bank, ta.dtype))
+            ))
+        else:
+            ss_s, key_s = self._res.store[rid]
+            self._res.store[rid] = (
+                ss_s._replace(tm=TMState(ta_state=np.array(bank))),
+                key_s,
+            )
 
     def tick(
         self,
@@ -645,11 +1012,253 @@ class TMService:
             out = self._maybe_analyze()
         return None if out is None else out[0]
 
+    # -- durable state (save / restore; DESIGN.md §15) ----------------------
+
+    def save(self, directory: str, *, step: Optional[int] = None,
+             keep: int = 3) -> str:
+        """Write the FULL consumer-side state as one atomic checkpoint
+        (train/checkpoint.py layout): TA banks, ring buffers, step
+        counters, RNG keys, the §5.3.2 policy FSM including the
+        known-good banks, the analysis history and the router's loss
+        counters. Staged ingress flushes first, so every accepted
+        datapoint is either in a saved ring buffer or already consumed —
+        save -> restore -> continue is bitwise identical to never
+        stopping. Residency services save the ASSEMBLED full-K logical
+        fleet: the checkpoint is residency-agnostic and restores under
+        any ``resident`` budget (migration across device budgets).
+        Returns the checkpoint path."""
+        with self._device_lock:
+            self.flush()
+            ss_K, keys_K = self._assemble_plane()
+            ps = self._ps
+            if self._res is not None:
+                best = (None if self._best_host is None
+                        else TMState(ta_state=self._best_host))
+            else:
+                best = ps.best_state
+            if self.history:
+                hsteps = np.stack([np.asarray(h[0]) for h in self.history])
+                haccs = np.stack([np.asarray(h[1]) for h in self.history])
+            else:
+                hsteps = np.zeros((0, self.n_replicas), dtype=np.int32)
+                haccs = np.zeros((0, self.n_replicas), dtype=np.float32)
+            with self.router.lock:
+                router_state = {
+                    "dropped": self.router.dropped.copy(),
+                    "flushes": np.int64(self.router.flushes),
+                }
+            tree = {
+                "ss": ss_K,
+                "keys": keys_K,
+                "rt": jax.tree.map(np.asarray, self.rt),
+                "policy": {
+                    "since": ps.since, "best": ps.best,
+                    "rollbacks": ps.rollbacks, "lost": ps.lost,
+                    "best_state": best,
+                },
+                "router": router_state,
+                "history": {"steps": hsteps, "acc": haccs},
+            }
+            extra = {
+                "service": self._service_manifest(),
+                "has_best_state": best is not None,
+            }
+            if step is None:
+                step = int(self.steps.max(initial=0))
+            return ckpt_mod.save(directory, int(step), tree, keep=keep,
+                                 extra=extra)
+
+    def _service_manifest(self) -> dict:
+        """JSON-able construction knobs — enough for :meth:`restore` to
+        rebuild the service without the caller knowing them."""
+        sc = self.sc
+
+        def plain(v):
+            if v is None or isinstance(v, (bool, int, float, str)):
+                return v
+            return np.asarray(v).tolist()
+
+        return {
+            "cfg": dataclasses.asdict(self.cfg),
+            "replicas": sc.replicas,
+            "buffer_capacity": sc.buffer_capacity,
+            "chunk": sc.chunk,
+            "ingress_block": sc.ingress_block,
+            "packed": sc.packed,
+            "history_limit": sc.history_limit,
+            "s": plain(sc.s),
+            "T": plain(sc.T),
+            "seed": plain(sc.seed),
+            "resident": sc.resident,
+            "policy": {
+                "analyze_every": self.policy.analyze_every,
+                "rollback_threshold": self.policy.rollback_threshold,
+            },
+        }
+
+    def load(self, directory: str, *, step: Optional[int] = None) -> None:
+        """Restore a :meth:`save` checkpoint INTO this service. The
+        service must structurally match the writer (same TMConfig,
+        replicas, capacity, packing — :meth:`restore` guarantees that);
+        the ``resident`` budget may differ. Anything staged or held now
+        is discarded: the checkpoint defines the complete state."""
+        with self._device_lock:
+            while self.router.take_block() is not None:
+                pass  # drop staged rows (pre-restore traffic)
+            man = ckpt_mod.read_manifest(directory, step=step)
+            meta = man["extra"]["service"]
+            if meta["replicas"] != self.n_replicas:
+                raise ValueError(
+                    f"checkpoint carries {meta['replicas']} replicas, "
+                    f"this service has {self.n_replicas}"
+                )
+            if bool(meta["packed"]) != bool(self.sc.packed):
+                raise ValueError(
+                    "checkpoint and service disagree on the packed "
+                    "datapath — ring-buffer rows are not interchangeable"
+                )
+            has_best = bool(man["extra"].get("has_best_state"))
+            template = {
+                "ss": self._ss,
+                "keys": 0,
+                "rt": self.rt,
+                "policy": {
+                    "since": 0, "best": 0, "rollbacks": 0, "lost": 0,
+                    "best_state": (TMState(ta_state=0) if has_best
+                                   else None),
+                },
+                "router": {"dropped": 0, "flushes": 0},
+                "history": {"steps": 0, "acc": 0},
+            }
+            tree, man = ckpt_mod.restore(directory, template, step=step,
+                                         device=False)
+            self.rt = jax.tree.map(jnp.asarray, tree["rt"])
+            pol = tree["policy"]
+            self._ps = _PolicyState(
+                since=np.asarray(pol["since"], dtype=np.int64),
+                best=np.asarray(pol["best"], dtype=np.float64),
+                rollbacks=np.asarray(pol["rollbacks"], dtype=np.int64),
+                lost=np.asarray(pol["lost"], dtype=np.int64),
+            )
+            self._best_host = None
+            if has_best:
+                bank_K = np.asarray(pol["best_state"].ta_state)
+                if self._res is not None:
+                    self._best_host = bank_K
+                else:
+                    bs = TMState(ta_state=jnp.asarray(bank_K))
+                    if self.mesh is not None:
+                        sh = shard_mod.replica_shardings(
+                            bs, self.mesh, n_replicas=self.n_replicas
+                        )
+                        bs = jax.tree.map(jax.device_put, bs, sh)
+                    self._ps.best_state = bs
+            hsteps, haccs = tree["history"]["steps"], tree["history"]["acc"]
+            self.history = [
+                (np.asarray(hsteps[i]), np.asarray(haccs[i]))
+                for i in range(len(hsteps))
+            ]
+            ss_K, keys_K = tree["ss"], tree["keys"]
+            with self.router.lock:
+                self.router.dropped[:] = np.asarray(
+                    tree["router"]["dropped"])
+                self.router.flushes = int(tree["router"]["flushes"])
+                self._dev_size = np.asarray(
+                    ss_K.buf.size, dtype=np.int64
+                ).reshape(self.n_replicas).copy()
+            self._install_plane(ss_K, keys_K)
+
+    def _install_plane(self, ss_K: SessionState, keys_K) -> None:
+        """Install a full-K logical (SessionState, keys) host tree. Under
+        residency the fleet re-partitions deterministically — replicas
+        0..resident-1 take the slots, the rest spill — which is invisible
+        to trajectories (activation is transparent)."""
+        if self._res is None:
+            plane = (jax.tree.map(jnp.asarray, ss_K), jnp.asarray(keys_K))
+            if self.mesh is not None:
+                sh = shard_mod.replica_shardings(
+                    plane, self.mesh, n_replicas=self.n_replicas
+                )
+                plane = jax.tree.map(jax.device_put, plane, sh)
+            self._ss, self._keys = plane
+            return
+        K, R = self.n_replicas, self.n_resident
+        res = self._res
+        res.store.clear()
+        res.slot_of[:] = -1
+        res.replica_of[:] = -1
+        res.last_use[:] = 0
+        host = jax.tree.map(np.asarray, (ss_K, keys_K))
+        dev = jax.tree.map(lambda a: jnp.asarray(a[:R]), host)
+        if self.mesh is not None:
+            sh = shard_mod.replica_shardings(dev, self.mesh, n_replicas=R)
+            dev = jax.tree.map(jax.device_put, dev, sh)
+        self._ss, self._keys = dev
+        res.assign(np.arange(R), np.arange(R))
+        for rid in range(R, K):
+            res.store[rid] = jax.tree.map(lambda a, _r=rid: a[_r], host)
+
+    @classmethod
+    def restore(
+        cls,
+        directory: str,
+        *,
+        step: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        eval_x=None,
+        eval_y=None,
+        resident: Union[int, None, str] = "saved",
+    ) -> "TMService":
+        """Rebuild a service from a :meth:`save` checkpoint: construction
+        knobs come from the manifest, arrays from the npz. ``mesh`` and
+        the eval set are runtime resources (not serialized) and are
+        passed fresh; ``resident`` defaults to the saved budget and may
+        be overridden (including to None) to migrate a fleet across
+        device budgets — the checkpoint itself is residency-agnostic."""
+        man = ckpt_mod.read_manifest(directory, step=step)
+        meta = man["extra"]["service"]
+        cfg = TMConfig(**meta["cfg"])
+        sc = ServiceConfig(
+            replicas=meta["replicas"],
+            buffer_capacity=meta["buffer_capacity"],
+            chunk=meta["chunk"],
+            ingress_block=meta["ingress_block"],
+            packed=meta["packed"],
+            history_limit=meta["history_limit"],
+            s=meta["s"],
+            T=meta["T"],
+            policy=AdaptPolicy(**meta["policy"]),
+            seed=meta["seed"],
+            mesh=mesh,
+            resident=(meta["resident"] if resident == "saved"
+                      else resident),
+        )
+        svc = cls(cfg, tm_mod.init_state(cfg), sc,
+                  eval_x=eval_x, eval_y=eval_y)
+        svc.load(directory, step=step)
+        return svc
+
     # -- observability ------------------------------------------------------
 
     @property
     def steps(self) -> np.ndarray:
-        return np.asarray(self._ss.step)
+        if self._res is None:
+            return np.asarray(self._ss.step)
+        out = np.zeros(self.n_replicas, dtype=np.int32)
+        step_p = np.asarray(self._ss.step)
+        m = self._res.replica_of >= 0
+        out[self._res.replica_of[m]] = step_p[m]
+        for rid, snap in self._res.store.items():
+            out[rid] = snap[0].step
+        return out
+
+    @property
+    def rng_keys(self) -> np.ndarray:
+        """Per-replica RNG keys, full-K host view (raw uint32 key data)."""
+        if self._res is None:
+            return np.asarray(self._keys)
+        _, keys_K = self._assemble_plane()
+        return keys_K
 
     @property
     def rollbacks(self) -> np.ndarray:

@@ -9,6 +9,13 @@ Layout:  <dir>/step_<n>/ arrays.npz + manifest.json   (+ <dir>/LATEST)
   they are re-placed under the *current* mesh's shardings, so a job can
   restart on a different device count / mesh shape (reshard-on-load).
 * keep-k garbage collection bounds disk use on long runs.
+* Dtype fidelity: every leaf restores with exactly the dtype it was saved
+  with (pinned against the manifest, not numpy's defaults) — int8 TA
+  banks, uint32 packed words and bool rows survive the trip bit for bit.
+  Typed JAX PRNG key arrays (``jax.random.key``) cannot pass through
+  ``np.asarray`` at all; they are routed through ``jax.random.key_data``
+  on save and re-wrapped with ``jax.random.wrap_key_data`` (impl recorded
+  in the manifest) on restore.
 """
 from __future__ import annotations
 
@@ -58,12 +65,26 @@ def _unflatten_like(template, flat: dict[str, Any]):
     return walk(template, "")
 
 
+def _is_typed_key(v) -> bool:
+    """True for new-style typed PRNG key arrays (custom key<...> dtype)."""
+    dtype = getattr(v, "dtype", None)
+    return dtype is not None and jax.dtypes.issubdtype(dtype, jax.dtypes.prng_key)
+
+
 def save(directory: str, step: int, tree, *, keep: int = 3,
          extra: Optional[dict] = None) -> str:
     """Atomic checkpoint write. Returns the final path."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(tree)
-    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    # Typed PRNG key arrays have a custom dtype np.asarray rejects: store
+    # the underlying uint32 key data and remember the impl for re-wrap.
+    key_impls = {}
+    arrays = {}
+    for k, v in flat.items():
+        if _is_typed_key(v):
+            key_impls[k] = str(jax.random.key_impl(v))
+            v = jax.random.key_data(v)
+        arrays[k] = np.asarray(v)
 
     final = os.path.join(directory, f"step_{step:09d}")
     tmp = final + ".tmp"
@@ -76,6 +97,7 @@ def save(directory: str, step: int, tree, *, keep: int = 3,
         "keys": sorted(arrays.keys()),
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "key_impls": key_impls,
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -113,13 +135,29 @@ def latest_step(directory: str) -> Optional[int]:
     return int(name.split("_")[1])
 
 
+def read_manifest(directory: str, *, step: Optional[int] = None) -> dict:
+    """The manifest alone (no array IO) — for callers that rebuild a
+    restore template from ``extra`` before loading the arrays."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
 def restore(directory: str, template, *, step: Optional[int] = None,
-            shardings=None):
+            shardings=None, device: bool = True):
     """Load a checkpoint into the template's structure.
 
     ``shardings`` (optional tree of NamedSharding) re-places every array under
     the current mesh — restarts may use a different mesh than the writer
-    (elastic scaling / reshard-on-load).
+    (elastic scaling / reshard-on-load). ``device=False`` returns the
+    manifest-pinned HOST numpy arrays untouched — callers that keep parts
+    of the tree host-side (e.g. the service's int64/float64 policy
+    counters, which a default-x32 ``jnp.asarray`` would silently demote)
+    place leaves themselves.
     """
     if step is None:
         step = latest_step(directory)
@@ -129,13 +167,26 @@ def restore(directory: str, template, *, step: Optional[int] = None,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
-    flat = {k: data[k] for k in manifest["keys"]}
+    key_impls = manifest.get("key_impls", {})
+    flat = {}
+    for k in manifest["keys"]:
+        # Pin the saved dtype explicitly: a leaf must restore as exactly
+        # what it was (int8 TA banks, uint32 words, bool rows), never as
+        # whatever numpy or a later asarray would promote it to.
+        v = np.asarray(data[k], dtype=np.dtype(manifest["dtypes"][k]))
+        if k in key_impls:
+            v = jax.random.wrap_key_data(
+                jax.numpy.asarray(v), impl=key_impls[k]
+            )
+        flat[k] = v
 
     tree = _unflatten_like(template, flat)
     if shardings is not None:
         tree = jax.tree.map(
             lambda x, s: jax.device_put(x, s), tree, shardings
         )
-    else:
-        tree = jax.tree.map(jax.numpy.asarray, tree)
+    elif device:
+        tree = jax.tree.map(
+            lambda x: x if _is_typed_key(x) else jax.numpy.asarray(x), tree
+        )
     return tree, manifest

@@ -184,9 +184,14 @@ def test_replica_shardings_specs():
         "state": jax.ShapeDtypeStruct((8, 3, 16, 32), jnp.int8),
         "scalar": jax.ShapeDtypeStruct((), jnp.float32),
     }
-    sh = shard_mod.replica_shardings(tree, mesh)
+    sh = shard_mod.replica_shardings(tree, mesh, n_replicas=8)
     assert sh["state"].spec == PS("data")
     assert sh["scalar"].spec == PS()
+    # the legacy no-n_replicas form is deprecated (it shards ANY
+    # divisible leading dim, scattering D | R stream leaves)
+    with pytest.warns(DeprecationWarning, match="n_replicas"):
+        sh_legacy = shard_mod.replica_shardings(tree, mesh)
+    assert sh_legacy["state"].spec == PS("data")
 
 
 def test_replicate_state_matches_init():

@@ -397,9 +397,12 @@ def test_replica_shardings_grid_major_device_local():
     assert sh["stream"].spec == PS()   # replicated: gather stays local
     assert sh["keys"].spec == PS()
     assert sh["scalar"].spec == PS()
-    # legacy behaviour (no n_replicas) still shards any divisible leading dim
+    # legacy behaviour (no n_replicas) still shards any divisible leading
+    # dim — exactly the D | R stream scattering the grid-major rule
+    # exists to prevent, so the legacy form is deprecated and warns
     if n_dev > 1:
-        sh_legacy = shard_mod.replica_shardings(tree, mesh)
+        with pytest.warns(DeprecationWarning, match="n_replicas"):
+            sh_legacy = shard_mod.replica_shardings(tree, mesh)
         assert sh_legacy["stream"].spec == PS("data")
 
 

@@ -65,6 +65,67 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_service_leaf_dtypes_roundtrip(tmp_path):
+    """Every leaf dtype a TMService checkpoint carries restores bit for
+    bit: int8 TA banks, uint32 packed words, bool rows, int32 steps,
+    int64/float64 host policy counters (incl. nan)."""
+    rng = np.random.default_rng(0)
+    tree = {
+        "ta": jnp.asarray(rng.integers(-99, 99, (2, 4, 8), dtype=np.int8)),
+        "words": jnp.asarray(rng.integers(0, 2**32, (3, 5),
+                                          dtype=np.uint32)),
+        "rows": jnp.asarray(rng.random((4, 16)) > 0.5),
+        "step": jnp.arange(4, dtype=jnp.int32),
+        "since": np.arange(4, dtype=np.int64) * 2**40,
+        "best": np.asarray([0.5, np.nan, 1.0, np.nan], dtype=np.float64),
+        "acc": np.asarray([0.25, 0.75], dtype=np.float32),
+    }
+    ckpt.save(str(tmp_path), 1, tree)
+    got, _ = ckpt.restore(str(tmp_path), tree, device=False)
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_flatten_with_path(tree)[0],
+        jax.tree_util.tree_flatten_with_path(got)[0],
+    ):
+        a, b = np.asarray(a), np.asarray(b)
+        assert b.dtype == a.dtype, (pa, a.dtype, b.dtype)
+        np.testing.assert_array_equal(a, b, err_msg=str(pa))
+
+
+def test_checkpoint_typed_prng_keys_roundtrip(tmp_path):
+    """Typed PRNG key arrays route through key_data/wrap_key_data (a bare
+    np.asarray rejects their custom dtype); raw uint32 keys pass as-is."""
+    tree = {
+        "typed": jax.random.key(0),
+        "batch": jax.random.split(jax.random.key(1), 4),
+        "raw": jax.random.PRNGKey(2),
+    }
+    ckpt.save(str(tmp_path), 1, tree)
+    got, manifest = ckpt.restore(str(tmp_path), tree)
+    assert manifest["key_impls"]  # typed keys were detected and recorded
+    for name in ("typed", "batch"):
+        assert jnp.issubdtype(got[name].dtype, jax.dtypes.prng_key)
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(got[name])),
+            np.asarray(jax.random.key_data(tree[name])),
+        )
+    np.testing.assert_array_equal(np.asarray(got["raw"]),
+                                  np.asarray(tree["raw"]))
+    assert got["raw"].dtype == jnp.uint32
+    # the restored typed key drives the SAME randomness
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.uniform(got["typed"], (3,))),
+        np.asarray(jax.random.uniform(tree["typed"], (3,))),
+    )
+
+
+def test_checkpoint_read_manifest(tmp_path):
+    ckpt.save(str(tmp_path), 3, {"x": jnp.arange(4)}, extra={"k": "v"})
+    man = ckpt.read_manifest(str(tmp_path))
+    assert man["step"] == 3 and man["extra"]["k"] == "v"
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_manifest(str(tmp_path / "nope"))
+
+
 def test_checkpoint_keep_k_and_latest(tmp_path):
     tree = {"x": jnp.arange(4)}
     for s in (1, 2, 3, 4):
