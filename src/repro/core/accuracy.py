@@ -111,6 +111,50 @@ def analyze_sets_replicated(
     return jnp.stack(out, axis=-1)                     # [R, n_sets]
 
 
+def analyze_pruned(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    xs: jax.Array,       # [n, f] bool | packed uint32
+    ys: jax.Array,       # [n] int32
+    sel: jax.Array,      # [C, M] int32 — clause ids to evaluate, per class
+    weights: jax.Array | None = None,   # [C, J] int magnitudes
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """Accuracy of the BUDGETED serve path over a set. Scalar f32.
+
+    The §16 calibration/benchmark measurement: same reduction as
+    :func:`analyze`, predictions from ``predict_batch_pruned_`` (only the
+    elected clauses contracted, weights folded into the vote). With a
+    full-permutation ``sel`` and unit weights this IS :func:`analyze`,
+    bit for bit.
+    """
+    preds = tm_mod.predict_batch_pruned_(cfg, state, rt, xs, sel, weights)
+    ok = (preds == ys).astype(jnp.float32)
+    if valid is None:
+        return jnp.mean(ok)
+    v = valid.astype(jnp.float32)
+    return jnp.sum(ok * v) / jnp.maximum(jnp.sum(v), 1.0)
+
+
+def analyze_pruned_replicated(
+    cfg: TMConfig,
+    state: TMState,      # leaves [R, ...]
+    rt: TMRuntime,
+    xs: jax.Array,       # [D, m, f] — replica r analyzes set r % D
+    ys: jax.Array,       # [D, m] int32
+    sel: jax.Array,      # [R, C, M] int32 — per-replica rankings
+    weights: jax.Array | None = None,   # [R, C, J] int magnitudes
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """Per-replica budgeted-serve accuracy. [R] f32 — the fleet's
+    accuracy-vs-budget curve in one contraction per budget point."""
+    preds = tm_mod.predict_batch_pruned_replicated_(
+        cfg, state, rt, xs, sel, weights
+    )
+    return _reduce_replicated(preds, ys, valid)
+
+
 class History(NamedTuple):
     """Fixed-capacity accuracy history (the paper's history RAM)."""
 

@@ -329,6 +329,38 @@ def predict_batch(
     return predict_batch_(cfg, state, rt, xs)
 
 
+def forward_batch_replicated(
+    cfg: TMConfig,
+    state: TMState,     # leaves [R, ...]
+    rt: TMRuntime,      # masks shared; s/T scalar or [R]
+    xs: jax.Array,      # [D, B, f] bool — replica r reads batch r % D
+    *,
+    training: bool = False,
+):
+    """Replica-first batch datapath: (clause_out [R,B,C,J], votes [R,B,C]).
+
+    R independent machines evaluate their batch in ONE dispatched
+    ``clause_eval_batch_replicated`` contraction; replica ``r`` reproduces
+    :func:`forward_batch` on batch ``r % D`` bit-for-bit (the kernel
+    contract's stacking guarantee). ``xs`` may be PACKED features
+    [D, B, ceil(f/32)] uint32 (§13) — dtype routing, bit-identical.
+    """
+    if xs.dtype == jnp.uint32:
+        lits = make_literals_packed(xs, cfg.n_features)  # [D, B, W]
+        include = ta_actions_packed(cfg, state, rt)      # [R, C, J, W]
+        clauses = dispatch.resolve(
+            cfg.backend
+        ).clause_eval_batch_replicated_packed(include, lits, training=training)
+    else:
+        lits = make_literals(xs)                        # [D, B, 2f]
+        include = ta_actions(cfg, state, rt)            # [R, C, J, L]
+        clauses = dispatch.resolve(cfg.backend).clause_eval_batch_replicated(
+            include, lits, training=training
+        )                                               # [R, B, C, J]
+    clauses = clauses & rt.clause_mask
+    return clauses, class_sums(cfg, clauses)            # [R, B, C]
+
+
 def predict_batch_replicated_(
     cfg: TMConfig,
     state: TMState,     # leaves [R, ...]
@@ -337,28 +369,10 @@ def predict_batch_replicated_(
 ) -> jax.Array:
     """Unjitted replica-first prediction [R, B] (composable inside jits).
 
-    The fleet serving path: R independent machines run batched inference in
-    ONE dispatched ``clause_eval_batch_replicated`` contraction. Replica
-    ``r`` reproduces :func:`predict_batch_` on batch ``r % D`` bit-for-bit
-    (the kernel contract's stacking guarantee; argmax sees identical votes).
-
-    ``xs`` may be PACKED features [D, B, ceil(f/32)] uint32 (§13): the
-    dtype routes to the packed replicated kernel, bit-identically.
+    The fleet serving path: :func:`forward_batch_replicated` + the active-
+    class argmax (inactive classes vote -inf), per replica.
     """
-    if xs.dtype == jnp.uint32:
-        lits = make_literals_packed(xs, cfg.n_features)  # [D, B, W]
-        include = ta_actions_packed(cfg, state, rt)      # [R, C, J, W]
-        clauses = dispatch.resolve(
-            cfg.backend
-        ).clause_eval_batch_replicated_packed(include, lits, training=False)
-    else:
-        lits = make_literals(xs)                        # [D, B, 2f]
-        include = ta_actions(cfg, state, rt)            # [R, C, J, L]
-        clauses = dispatch.resolve(cfg.backend).clause_eval_batch_replicated(
-            include, lits, training=False
-        )                                               # [R, B, C, J]
-    clauses = clauses & rt.clause_mask
-    votes = class_sums(cfg, clauses)                    # [R, B, C]
+    _, votes = forward_batch_replicated(cfg, state, rt, xs, training=False)
     votes = jnp.where(rt.class_mask, votes, jnp.iinfo(jnp.int32).min)
     return jnp.argmax(votes, axis=-1)                   # [R, B]
 
@@ -369,3 +383,137 @@ def predict_batch_replicated(
 ) -> jax.Array:
     """Jitted :func:`predict_batch_replicated_` — the fleet ``infer`` entry."""
     return predict_batch_replicated_(cfg, state, rt, xs)
+
+
+# ---------------------------------------------------------------------------
+# Budgeted (pruned / weighted) inference — DESIGN.md §16.
+# ---------------------------------------------------------------------------
+
+
+def vote_weights(
+    cfg: TMConfig, rt: TMRuntime, weights: Optional[jax.Array] = None
+) -> jax.Array:
+    """Signed per-clause vote weights: polarity x clause_mask x |weight|.
+
+    ``weights`` is an optional [.., C, J] int plane of positive magnitudes
+    (None = unit weights). Returns [C, J] (or [.., C, J]) int32 such that
+    ``votes = sum_j clause_out[.., c, j] * vote_weights(...)[.., c, j]``
+    reproduces :func:`class_sums` on mask-gated outputs exactly when
+    weights are unit — the bitwise bridge between the budgeted vote and
+    the plain serving path.
+    """
+    base = clause_polarity(cfg) * rt.clause_mask.astype(jnp.int32)   # [J]
+    if weights is None:
+        return jnp.broadcast_to(base, (cfg.max_classes, cfg.max_clauses))
+    return weights.astype(jnp.int32) * base
+
+
+def forward_batch_pruned(
+    cfg: TMConfig,
+    state: TMState,
+    rt: TMRuntime,
+    xs: jax.Array,       # [B, f] bool | [B, ceil(f/32)] uint32
+    sel: jax.Array,      # [C, M] int32 — clause ids to evaluate, per class
+    weights: Optional[jax.Array] = None,  # [C, J] int magnitudes (None = unit)
+):
+    """Budgeted batch datapath: (clause_out [B,C,M], votes [B,C] i32).
+
+    Only the ``sel``-elected clauses are contracted (compacted include
+    banks — the kernel contract's pruned entries), and the class vote
+    folds the signed :func:`vote_weights` of the elected clauses. With
+    ``sel`` a full permutation and unit weights the int32 vote sums are
+    term-for-term a reordering of :func:`forward_batch`'s — bitwise
+    identical votes, hence bitwise identical predictions.
+    """
+    kb = dispatch.resolve(cfg.backend)
+    if xs.dtype == jnp.uint32:
+        lits = make_literals_packed(xs, cfg.n_features)
+        include = ta_actions_packed(cfg, state, rt)
+        clauses = kb.clause_eval_batch_pruned_packed(
+            include, sel, lits, training=False
+        )
+    else:
+        lits = make_literals(xs)
+        include = ta_actions(cfg, state, rt)
+        clauses = kb.clause_eval_batch_pruned(
+            include, sel, lits, training=False
+        )                                                  # [B, C, M]
+    swt = vote_weights(cfg, rt, weights)                   # [C, J]
+    wsel = jnp.take_along_axis(swt, sel, axis=-1)          # [C, M]
+    votes = jnp.sum(clauses.astype(jnp.int32) * wsel[None], axis=-1)
+    return clauses, votes
+
+
+def predict_batch_pruned_(
+    cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array,
+    sel: jax.Array, weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Unjitted budgeted prediction [B] (composable inside other jits)."""
+    _, votes = forward_batch_pruned(cfg, state, rt, xs, sel, weights)
+    votes = jnp.where(rt.class_mask[None, :], votes, jnp.iinfo(jnp.int32).min)
+    return jnp.argmax(votes, axis=-1)
+
+
+@partial(jax.jit, static_argnums=0)
+def predict_batch_pruned(
+    cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array,
+    sel: jax.Array, weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Jitted :func:`predict_batch_pruned_` — the budgeted serving entry."""
+    return predict_batch_pruned_(cfg, state, rt, xs, sel, weights)
+
+
+def forward_batch_pruned_replicated(
+    cfg: TMConfig,
+    state: TMState,      # leaves [R, ...]
+    rt: TMRuntime,
+    xs: jax.Array,       # [D, B, ...] — replica r reads batch r % D
+    sel: jax.Array,      # [R, C, M] int32 — per-replica clause rankings
+    weights: Optional[jax.Array] = None,  # [R, C, J] int magnitudes
+):
+    """Replica-first budgeted datapath: (clauses [R,B,C,M], votes [R,B,C]).
+
+    Every replica serves from its OWN ranked clause subset (and weight
+    plane) in one contraction over the compacted banks.
+    """
+    kb = dispatch.resolve(cfg.backend)
+    if xs.dtype == jnp.uint32:
+        lits = make_literals_packed(xs, cfg.n_features)
+        include = ta_actions_packed(cfg, state, rt)
+        clauses = kb.clause_eval_batch_pruned_replicated_packed(
+            include, sel, lits, training=False
+        )
+    else:
+        lits = make_literals(xs)
+        include = ta_actions(cfg, state, rt)
+        clauses = kb.clause_eval_batch_pruned_replicated(
+            include, sel, lits, training=False
+        )                                                  # [R, B, C, M]
+    swt = vote_weights(cfg, rt, weights)
+    if swt.ndim == 2:
+        swt = jnp.broadcast_to(swt, sel.shape[:1] + swt.shape)
+    wsel = jnp.take_along_axis(swt, sel, axis=-1)          # [R, C, M]
+    votes = jnp.sum(clauses.astype(jnp.int32) * wsel[:, None], axis=-1)
+    return clauses, votes                                  # votes [R, B, C]
+
+
+def predict_batch_pruned_replicated_(
+    cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array,
+    sel: jax.Array, weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Unjitted replica-first budgeted prediction [R, B]."""
+    _, votes = forward_batch_pruned_replicated(
+        cfg, state, rt, xs, sel, weights
+    )
+    votes = jnp.where(rt.class_mask, votes, jnp.iinfo(jnp.int32).min)
+    return jnp.argmax(votes, axis=-1)
+
+
+@partial(jax.jit, static_argnums=0)
+def predict_batch_pruned_replicated(
+    cfg: TMConfig, state: TMState, rt: TMRuntime, xs: jax.Array,
+    sel: jax.Array, weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Jitted :func:`predict_batch_pruned_replicated_` — the fleet's
+    budgeted serve entry (TMService.serve with a compute budget)."""
+    return predict_batch_pruned_replicated_(cfg, state, rt, xs, sel, weights)

@@ -13,7 +13,6 @@ production sharding pass must do rather than crash.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import jax
@@ -156,25 +155,22 @@ def replica_shardings(
 
     ``n_replicas`` pins the layout rule for mixed trees: sweep inputs mix
     full-R leaves (TA banks, per-replica s/T) with per-data-stream leaves
-    of leading ``D | R`` (ordering datapoints, RNG keys). When given, ONLY
-    leaves whose leading dim equals ``n_replicas`` shard — the grid-major
-    replica axis goes device-local in contiguous slabs while every data
-    stream is replicated onto all devices, so the kernels' ``r % D`` gather
-    never crosses a device boundary. Without it (legacy behaviour) any
-    divisible leading dim shards, which scatters the D streams away from
-    the replicas that read them — that call form is DEPRECATED and warns;
-    every in-repo caller (the sweep engine, the serving fleet, the
-    residency plane) pins ``n_replicas`` explicitly.
+    of leading ``D | R`` (ordering datapoints, RNG keys). ONLY leaves whose
+    leading dim equals ``n_replicas`` shard — the grid-major replica axis
+    goes device-local in contiguous slabs while every data stream is
+    replicated onto all devices, so the kernels' ``r % D`` gather never
+    crosses a device boundary. The old guess-by-divisibility form
+    (``n_replicas=None``) sharded any divisible leading dim, scattering the
+    D streams away from the replicas that read them; it warned as
+    deprecated through PR 8 and is now a hard ``TypeError``.
     """
     if n_replicas is None:
-        warnings.warn(
-            "replica_shardings(n_replicas=None) shards ANY divisible "
-            "leading dim, scattering D | R data-stream leaves away from "
-            "the replicas that read them (cross-device r % D gathers). "
-            "Pass n_replicas explicitly so only the full-R grid-major "
-            "axis shards.",
-            DeprecationWarning,
-            stacklevel=2,
+        raise TypeError(
+            "replica_shardings() requires n_replicas: the old "
+            "n_replicas=None form sharded ANY divisible leading dim, "
+            "scattering D | R data-stream leaves away from the replicas "
+            "that read them (cross-device r % D gathers). Pass the fleet's "
+            "replica count so only the full-R grid-major axis shards."
         )
     present = _mesh_axes_present(mesh, axes)
     group = int(np.prod([mesh.shape[a] for a in present])) if present else 1
@@ -186,7 +182,7 @@ def replica_shardings(
             present
             and len(shape) >= 1
             and shape[0] % group == 0
-            and (n_replicas is None or shape[0] == n_replicas)
+            and shape[0] == n_replicas
         ):
             return NamedSharding(mesh, PS(spec_axes))
         return NamedSharding(mesh, PS())

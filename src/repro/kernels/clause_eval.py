@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import ref as _ref
+
 # int8-native TPU tile: 32 sublanes x 128 lanes.
 BLK_CJ = 32
 LANES = 128
@@ -507,3 +509,57 @@ def clause_eval_batch_replicated_packed(
     fired = jnp.swapaxes(viol == 0, 1, 2).reshape(R, B, C, J)
     empty = ~jnp.any(include_packed != 0, axis=-1).reshape(R, 1, C, J)
     return jnp.where(empty, jnp.bool_(training), fired)
+
+
+# ---------------------------------------------------------------------------
+# Budgeted (pruned) eval: compacted include banks (DESIGN.md §16).
+#
+# The XLA-side ``ref.gather_include`` compacts the bank to the top-M ranked
+# clauses per class BEFORE the pallas launch, so the kernel grid itself
+# shrinks with the budget — C·M/BLK_CJ clause blocks instead of C·J/BLK_CJ —
+# rather than masking pruned clauses inside a full-size contraction.
+# ---------------------------------------------------------------------------
+
+
+def clause_eval_batch_pruned(
+    include: jax.Array, sel: jax.Array, literals: jax.Array,
+    *, training: bool, interpret: bool = True,
+) -> jax.Array:
+    """[C, J, L] x sel [C, M] x [B, L] -> [B, C, M] (see ref twin)."""
+    return clause_eval_batch(
+        _ref.gather_include(include, sel), literals,
+        training=training, interpret=interpret,
+    )
+
+
+def clause_eval_batch_pruned_replicated(
+    include: jax.Array, sel: jax.Array, literals: jax.Array,
+    *, training: bool, interpret: bool = True,
+) -> jax.Array:
+    """[R, C, J, L] x sel [R, C, M] x [D, B, L] -> [R, B, C, M]."""
+    return clause_eval_batch_replicated(
+        _ref.gather_include(include, sel), literals,
+        training=training, interpret=interpret,
+    )
+
+
+def clause_eval_batch_pruned_packed(
+    include_packed: jax.Array, sel: jax.Array, literals_packed: jax.Array,
+    *, training: bool, interpret: bool = True,
+) -> jax.Array:
+    """[C, J, W] u32 x sel [C, M] x [B, W] u32 -> [B, C, M]."""
+    return clause_eval_batch_packed(
+        _ref.gather_include(include_packed, sel), literals_packed,
+        training=training, interpret=interpret,
+    )
+
+
+def clause_eval_batch_pruned_replicated_packed(
+    include_packed: jax.Array, sel: jax.Array, literals_packed: jax.Array,
+    *, training: bool, interpret: bool = True,
+) -> jax.Array:
+    """[R, C, J, W] u32 x sel [R, C, M] x [D, B, W] u32 -> [R, B, C, M]."""
+    return clause_eval_batch_replicated_packed(
+        _ref.gather_include(include_packed, sel), literals_packed,
+        training=training, interpret=interpret,
+    )

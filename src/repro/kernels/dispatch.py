@@ -69,6 +69,22 @@ class KernelBackend(NamedTuple):
       literals_packed [D,B,W], *, training) -> [R,B,C,J]`` — replica-first
       packed analysis/serving pass, same ``r % D`` data-stream rule; MUST
       equal ``clause_eval_batch_replicated`` on unpacked operands.
+    * ``clause_eval_batch_pruned(include [C,J,L], sel [C,M] i32,
+      literals [B,L], *, training) -> [B,C,M]`` — budgeted serve
+      (DESIGN.md §16): the include bank compacts to the selected clauses
+      (a gather along J) BEFORE the contraction, so compute shrinks with
+      the budget M rather than masking. Column m MUST equal
+      ``clause_eval_batch(...)[:, c, sel[c, m]]`` bit-for-bit.
+    * ``clause_eval_batch_pruned_replicated(include [R,C,J,L],
+      sel [R,C,M], literals [D,B,L], *, training) -> [R,B,C,M]`` —
+      replica-first budgeted serve; replica ``r`` reads batch ``r % D``
+      and its OWN per-replica ranking ``sel[r]``.
+    * ``clause_eval_batch_pruned_packed(include_packed [C,J,W] u32,
+      sel [C,M], literals_packed [B,W] u32, *, training) -> [B,C,M]`` and
+      ``clause_eval_batch_pruned_replicated_packed([R,C,J,W], [R,C,M],
+      [D,B,W], *, training) -> [R,B,C,M]`` — the packed twins (the gather
+      never touches the word axis, so the §13 tail-bits-zero contract is
+      preserved and packed pruned MUST equal unpacked pruned bit-for-bit).
     * ``feedback_step(ta_state [C,J,L], literals [L], clause_out [C,J],
       type1_sel [C,J], type2_sel [C,J], u [C,J,L], *, s, n_states, s_policy,
       boost_true_positive) -> new ta_state`` — one datapoint's TA update.
@@ -87,6 +103,10 @@ class KernelBackend(NamedTuple):
     clause_eval_batch_replicated: Callable[..., jax.Array]
     clause_eval_batch_packed: Callable[..., jax.Array]
     clause_eval_batch_replicated_packed: Callable[..., jax.Array]
+    clause_eval_batch_pruned: Callable[..., jax.Array]
+    clause_eval_batch_pruned_replicated: Callable[..., jax.Array]
+    clause_eval_batch_pruned_packed: Callable[..., jax.Array]
+    clause_eval_batch_pruned_replicated_packed: Callable[..., jax.Array]
     feedback_step: Callable[..., jax.Array]
     feedback_step_replicated: Callable[..., jax.Array]
 
@@ -143,6 +163,14 @@ def _make_ref() -> KernelBackend:
         clause_eval_batch_replicated_packed=(
             ref.clause_eval_batch_replicated_packed
         ),
+        clause_eval_batch_pruned=ref.clause_eval_batch_pruned,
+        clause_eval_batch_pruned_replicated=(
+            ref.clause_eval_batch_pruned_replicated
+        ),
+        clause_eval_batch_pruned_packed=ref.clause_eval_batch_pruned_packed,
+        clause_eval_batch_pruned_replicated_packed=(
+            ref.clause_eval_batch_pruned_replicated_packed
+        ),
         feedback_step=ref.feedback_step,
         feedback_step_replicated=ref.feedback_step_replicated,
     )
@@ -160,6 +188,14 @@ def _make_pallas() -> KernelBackend:
         clause_eval_batch_packed=ops.clause_eval_batch_packed,
         clause_eval_batch_replicated_packed=(
             ops.clause_eval_batch_replicated_packed
+        ),
+        clause_eval_batch_pruned=ops.clause_eval_batch_pruned,
+        clause_eval_batch_pruned_replicated=(
+            ops.clause_eval_batch_pruned_replicated
+        ),
+        clause_eval_batch_pruned_packed=ops.clause_eval_batch_pruned_packed,
+        clause_eval_batch_pruned_replicated_packed=(
+            ops.clause_eval_batch_pruned_replicated_packed
         ),
         feedback_step=ops.feedback_step,
         feedback_step_replicated=ops.feedback_step_replicated,

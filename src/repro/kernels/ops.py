@@ -73,6 +73,51 @@ def clause_eval_batch_replicated_packed(
     )
 
 
+def clause_eval_batch_pruned(
+    include: jax.Array, sel: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """[C, J, L] x sel [C, M] x [B, L] -> [B, C, M] (see
+    ref.clause_eval_batch_pruned). The include bank compacts to the
+    selected clauses before launch, so the kernel grid shrinks with M."""
+    return _ce.clause_eval_batch_pruned(
+        include, sel, literals, training=training, interpret=INTERPRET
+    )
+
+
+def clause_eval_batch_pruned_replicated(
+    include: jax.Array, sel: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """[R, C, J, L] x sel [R, C, M] x [D, B, L] -> [R, B, C, M] (see
+    ref.clause_eval_batch_pruned_replicated)."""
+    return _ce.clause_eval_batch_pruned_replicated(
+        include, sel, literals, training=training, interpret=INTERPRET
+    )
+
+
+def clause_eval_batch_pruned_packed(
+    include_packed: jax.Array, sel: jax.Array, literals_packed: jax.Array,
+    *, training: bool,
+) -> jax.Array:
+    """[C, J, W] u32 x sel [C, M] x [B, W] u32 -> [B, C, M] (see
+    ref.clause_eval_batch_pruned_packed)."""
+    return _ce.clause_eval_batch_pruned_packed(
+        include_packed, sel, literals_packed,
+        training=training, interpret=INTERPRET,
+    )
+
+
+def clause_eval_batch_pruned_replicated_packed(
+    include_packed: jax.Array, sel: jax.Array, literals_packed: jax.Array,
+    *, training: bool,
+) -> jax.Array:
+    """[R, C, J, W] u32 x sel [R, C, M] x [D, B, W] u32 -> [R, B, C, M]
+    (see ref.clause_eval_batch_pruned_replicated_packed)."""
+    return _ce.clause_eval_batch_pruned_replicated_packed(
+        include_packed, sel, literals_packed,
+        training=training, interpret=INTERPRET,
+    )
+
+
 def feedback_step(
     ta_state: jax.Array,
     literals: jax.Array,

@@ -176,6 +176,77 @@ def clause_eval_batch_replicated_packed(
     return out.reshape(R, B, C, J)
 
 
+def gather_include(include: jax.Array, sel: jax.Array) -> jax.Array:
+    """Compact an include bank to the selected clauses: [..., C, J, L|W] x
+    sel [..., C, M] i32 -> [..., C, M, L|W].
+
+    The budgeted-serve primitive (DESIGN.md §16): instead of masking
+    pruned clauses out (which still pays the full [C·J, L] contraction),
+    the include bank is *gathered* down to the top-M ranked clauses per
+    class, so the clause contraction — GEMM rows on ref, grid blocks on
+    pallas — shrinks with the budget. Works on unpacked [.., L] bool and
+    packed [.., W] uint32 banks alike (the gather never touches the last
+    axis, so the §13 packing contract — tail bits zero — is preserved).
+    """
+    return jnp.take_along_axis(include, sel[..., None], axis=-2)
+
+
+def clause_eval_batch_pruned(
+    include: jax.Array, sel: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """Budgeted batch eval: only the selected clauses are contracted.
+
+    Args:
+      include: [C, J, L] bool — the FULL post-fault include bank.
+      sel: [C, M] int32 — clause indices (within J) to evaluate, per class.
+      literals: [B, L] bool.
+
+    Returns [B, C, M] bool: column m is clause ``sel[c, m]``'s output.
+    MUST equal ``clause_eval_batch(include, literals)[:, c, sel[c, m]]``
+    bit-for-bit — the compaction is a pure gather, so every selected
+    clause (including empty ones) keeps its full-bank semantics.
+    """
+    return clause_eval_batch(
+        gather_include(include, sel), literals, training=training
+    )
+
+
+def clause_eval_batch_pruned_replicated(
+    include: jax.Array, sel: jax.Array, literals: jax.Array, *, training: bool
+) -> jax.Array:
+    """Replica-first budgeted eval: include [R, C, J, L] x sel [R, C, M] x
+    literals [D, B, L] -> [R, B, C, M] (replica ``r`` reads batch
+    ``r % D`` and its OWN clause ranking ``sel[r]``)."""
+    return clause_eval_batch_replicated(
+        gather_include(include, sel), literals, training=training
+    )
+
+
+def clause_eval_batch_pruned_packed(
+    include_packed: jax.Array, sel: jax.Array, literals_packed: jax.Array,
+    *, training: bool,
+) -> jax.Array:
+    """Bit-packed budgeted eval: include [C, J, W] u32 x sel [C, M] x
+    literals [B, W] u32 -> [B, C, M]. The AND+popcount contraction runs
+    over M gathered words-rows per class instead of J."""
+    return clause_eval_batch_packed(
+        gather_include(include_packed, sel), literals_packed,
+        training=training,
+    )
+
+
+def clause_eval_batch_pruned_replicated_packed(
+    include_packed: jax.Array, sel: jax.Array, literals_packed: jax.Array,
+    *, training: bool,
+) -> jax.Array:
+    """Replica-first bit-packed budgeted eval: [R, C, J, W] u32 x
+    [R, C, M] x [D, B, W] u32 -> [R, B, C, M]."""
+    return clause_eval_batch_replicated_packed(
+        gather_include(include_packed, sel), literals_packed,
+        training=training,
+    )
+
+
 def feedback_step(
     ta_state: jax.Array,    # [C, J, L] int8/int16 (pre-update)
     literals: jax.Array,    # [L] bool

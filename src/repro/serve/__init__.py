@@ -18,6 +18,11 @@ from repro.serve.service import (  # noqa: F401
     TickReport,
     TMService,
 )
+from repro.serve.tunable import (  # noqa: F401
+    ServeAux,
+    TunableConfig,
+    TuneController,
+)
 from repro.serve.traffic import (  # noqa: F401
     SCENARIOS,
     ProducerScript,
@@ -40,8 +45,11 @@ __all__ = [
     "ProducerScript",
     "SCENARIOS",
     "Scenario",
+    "ServeAux",
     "ServiceConfig",
     "TickReport",
+    "TunableConfig",
+    "TuneController",
     "TMFleetAdaptManager",
     "TMOnlineAdaptConfig",
     "TMOnlineAdaptManager",

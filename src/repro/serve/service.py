@@ -48,6 +48,7 @@ from repro.distributed import sharding as shard_mod
 from repro.kernels import packing
 from repro.serve import residency as res_mod
 from repro.serve import router as router_mod
+from repro.serve import tunable as tun_mod
 from repro.train import checkpoint as ckpt_mod
 
 
@@ -189,6 +190,16 @@ class ServiceConfig:
     mesh with bounded device memory. None (default) keeps every replica
     resident. Requires scalar ``s``/``T`` (a slot's runtime ports must
     not change meaning with the replica occupying it).
+
+    ``tunable`` (a :class:`~repro.serve.tunable.TunableConfig`) arms the
+    runtime-tunable serving path (DESIGN.md §16): after
+    :meth:`TMService.calibrate` ranks every replica's clauses, ``serve``
+    takes a per-call compute ``budget`` (fraction of clauses actually
+    contracted), optional calibrated integer vote weights, and early-exit
+    voting; with ``adapt`` on, ``tick`` moves the live budget from
+    observed queue depth (load shedding under SLO pressure). Budget 1.0
+    with unit weights and early exit off is bitwise identical to plain
+    serving.
     """
 
     replicas: int = 1
@@ -203,6 +214,7 @@ class ServiceConfig:
     policy: AdaptPolicy = dataclasses.field(default_factory=AdaptPolicy)
     seed: Union[int, Sequence[int]] = 0
     mesh: Optional[Mesh] = None
+    tunable: Optional[tun_mod.TunableConfig] = None
 
     def runtime(self, cfg: TMConfig) -> TMRuntime:
         """A fault-free runtime with this config's s/T ports."""
@@ -374,6 +386,14 @@ class TMService:
         # AdaptPolicy.apply crash on standalone-initialized policies).
         self._ps = sc.policy.init(K)
         self.history: list = []            # (steps [K], accuracies [K])
+        # Runtime-tunable serving (DESIGN.md §16): the controller holds
+        # per-replica clause rankings host-side — [K, ...] like _best_host,
+        # so residency eviction never touches them and save/restore
+        # carries them with the fleet.
+        self.tuner: Optional[tun_mod.TuneController] = (
+            None if sc.tunable is None
+            else tun_mod.TuneController(sc.tunable, K, cfg.max_clauses)
+        )
 
     def _ingest(self, xs) -> jax.Array:
         """Bool rows -> the service's wire representation: bool features
@@ -754,12 +774,23 @@ class TMService:
 
     # -- inference ----------------------------------------------------------
 
-    def serve(self, xs) -> np.ndarray:
+    def serve(self, xs, *, budget=None, return_aux: bool = False):
         """Fleet inference [K, B]: every member's batch in ONE contraction.
 
         ``xs`` is [B, f] (the same batch served by all members) or
         [K, B, f] (one batch per member). Packed services pack the batch
         here and serve it through the AND+popcount kernels, bit-identically.
+
+        ``budget`` (fraction of clauses, (0, 1]) routes the request
+        through the runtime-tunable path (DESIGN.md §16): only the top-m
+        ranked clauses per class are contracted, with the configured
+        weights/early-exit applied. Requires ``ServiceConfig(tunable=...)``
+        and a prior :meth:`calibrate`. Without an explicit budget, a
+        tunable service serves at the controller's live budget (plain
+        path when that is 1.0 with unit weights and no early exit).
+        ``return_aux`` additionally returns the
+        :class:`~repro.serve.tunable.ServeAux` (elected clause ids +
+        per-request evaluated counts) — tunable path only.
 
         A residency service cannot serve the whole fleet in one
         contraction (only ``resident`` machines are on device) — use
@@ -769,22 +800,73 @@ class TMService:
         with self._device_lock:
             if self._res is not None:
                 raise ValueError(
-                    "a residency service serves named replicas: use "
-                    "serve_replicas(replicas, xs)"
+                    "TMService.serve needs the whole fleet device-resident, "
+                    f"but ServiceConfig(resident={self.sc.resident}) < "
+                    f"replicas={self.n_replicas} spills part of it: use "
+                    "serve_replicas(replicas, xs) to serve named members "
+                    "(activated on demand), or raise the 'resident' knob to "
+                    "cover the fleet"
                 )
-            if xs.ndim == 2 and self._k1:
-                tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
-                return np.asarray(
-                    tm_mod.predict_batch(self.cfg, tm1, self.rt, xs)
-                )[None]
-            if xs.ndim == 2:
-                # D = 1: one shared stream, factored (stored once)
-                xs = xs[None]
-            return np.asarray(tm_mod.predict_batch_replicated(
-                self.cfg, self._ss.tm, self.rt, xs
-            ))
+            tunable = budget is not None or (
+                self.tuner is not None and self.tuner.active
+            )
+            if not tunable:
+                if return_aux:
+                    raise ValueError(
+                        "return_aux reports the budgeted path's compute — "
+                        "pass a budget (or configure an active tunable)"
+                    )
+                if xs.ndim == 2 and self._k1:
+                    tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+                    return np.asarray(
+                        tm_mod.predict_batch(self.cfg, tm1, self.rt, xs)
+                    )[None]
+                if xs.ndim == 2:
+                    # D = 1: one shared stream, factored (stored once)
+                    xs = xs[None]
+                return np.asarray(tm_mod.predict_batch_replicated(
+                    self.cfg, self._ss.tm, self.rt, xs
+                ))
+            tuner = self._require_tuner()
+            preds, aux = self._serve_tunable(
+                self._ss.tm, xs, tuner.order, tuner.weights, budget
+            )
+            return (preds, aux) if return_aux else preds
 
-    def serve_replicas(self, replicas, xs) -> np.ndarray:
+    def _require_tuner(self) -> tun_mod.TuneController:
+        if self.tuner is None:
+            raise ValueError(
+                "budgeted serving needs ServiceConfig(tunable=TunableConfig"
+                "(...)) — this service was built without it"
+            )
+        if not self.tuner.calibrated:
+            raise ValueError(
+                "budgeted serving needs clause ranks: call calibrate() "
+                "(after training) before serving with a budget"
+            )
+        return self.tuner
+
+    def _serve_tunable(
+        self, tm_plane, xs, order, weights, budget
+    ) -> tuple[np.ndarray, tun_mod.ServeAux]:
+        """The budgeted serve body on an already-gathered device plane.
+        ``order``/``weights`` rows must align with the plane's rows."""
+        tc = self.sc.tunable
+        b = self.tuner.budget if budget is None else float(budget)
+        m = tun_mod.m_for_budget(b, self.cfg.max_clauses)
+        if xs.ndim == 2:
+            xs = xs[None]     # D = 1: one shared stream
+        preds, evaluated = tun_mod.predict_pruned_replicated_host(
+            self.cfg, tm_plane, self.rt, xs, order, weights, m,
+            group=tc.group if tc.early_exit else None,
+        )
+        aux = tun_mod.ServeAux(
+            budget=b, m=m, sel=order[:, :, :m].copy(), evaluated=evaluated
+        )
+        return preds, aux
+
+    def serve_replicas(self, replicas, xs, *, budget=None,
+                       return_aux: bool = False):
         """Inference for the NAMED replicas only: [n, B] predictions.
 
         ``xs`` is [B, f] (one batch shared by the named members) or
@@ -794,12 +876,26 @@ class TMService:
         memory; predictions are bit-identical to an always-resident
         fleet's (prediction never touches the s/T ports, so the gathered
         sub-plane contraction is exact).
+
+        ``budget``/``return_aux`` as in :meth:`serve` — each named member
+        serves from its OWN calibrated ranking (rankings are host-side
+        per-replica state, so they survive eviction; the cohort gather
+        reads them by replica id, not by slot).
         """
         xs = self._ingest(xs)
         rids = np.asarray(replicas, dtype=np.int64).reshape(-1)
         shared = xs.ndim == 2
         cap = self.n_resident
-        outs = []
+        tunable = budget is not None or (
+            self.tuner is not None and self.tuner.active
+        )
+        if return_aux and not tunable:
+            raise ValueError(
+                "return_aux reports the budgeted path's compute — pass a "
+                "budget (or configure an active tunable)"
+            )
+        tuner = self._require_tuner() if tunable else None
+        outs, auxes = [], []
         with self._device_lock:
             for i in range(0, len(rids), cap):
                 cohort = rids[i:i + cap]
@@ -808,10 +904,85 @@ class TMService:
                 tm_c = jax.tree.map(lambda a: a[jnp.asarray(slots)],
                                     self._ss.tm)
                 xs_c = xs[None] if shared else xs[i:i + cap]
-                outs.append(np.asarray(tm_mod.predict_batch_replicated(
-                    self.cfg, tm_c, self.rt, xs_c
-                )))
-        return np.concatenate(outs, axis=0)
+                if not tunable:
+                    outs.append(np.asarray(tm_mod.predict_batch_replicated(
+                        self.cfg, tm_c, self.rt, xs_c
+                    )))
+                    continue
+                w_c = (None if tuner.weights is None
+                       else tuner.weights[cohort])
+                preds, aux = self._serve_tunable(
+                    tm_c, xs_c, tuner.order[cohort], w_c, budget
+                )
+                outs.append(preds)
+                auxes.append(aux)
+        preds = np.concatenate(outs, axis=0)
+        if not return_aux:
+            return preds
+        aux = tun_mod.ServeAux(
+            budget=auxes[0].budget, m=auxes[0].m,
+            sel=np.concatenate([a.sel for a in auxes], axis=0),
+            evaluated=np.concatenate([a.evaluated for a in auxes], axis=0),
+        )
+        return preds, aux
+
+    def calibrate(self, xs=None, ys=None) -> np.ndarray:
+        """Rank every replica's clauses from a calibration set (default:
+        the eval set); derives integer vote weights when the tunable
+        config asks for them. Returns the [K, C, J] score plane.
+
+        Under residency the fleet calibrates in cohorts of at most
+        ``resident`` slots (evicted members activate transparently, like
+        the analysis sweep) — ranks land host-side per replica either
+        way. Recalibrate whenever the banks have drifted enough that the
+        ranking should follow (e.g. after offline_train or a long online
+        phase); serving between calibrations just uses the older ranks.
+        """
+        if self.tuner is None:
+            raise ValueError(
+                "calibrate needs ServiceConfig(tunable=TunableConfig(...))"
+            )
+        xs = self.eval_x if xs is None else self._ingest(xs)
+        ys = self.eval_y if ys is None else jnp.asarray(ys, jnp.int32)
+        if xs is None or ys is None:
+            raise ValueError(
+                "calibrate needs a labelled set: pass (xs, ys) or build "
+                "the service with eval_x/eval_y"
+            )
+        K = self.n_replicas
+        C, J = self.cfg.max_classes, self.cfg.max_clauses
+        scores = np.zeros((K, C, J), dtype=np.int32)
+        with self._device_lock:
+            if self._res is None:
+                if self._k1:
+                    tm1 = jax.tree.map(lambda a: a[0], self._ss.tm)
+                    scores[0] = np.asarray(tun_mod.clause_scores(
+                        self.cfg, tm1, self.rt, xs, ys
+                    ))
+                else:
+                    scores[:] = np.asarray(tun_mod.clause_scores_replicated(
+                        self.cfg, self._ss.tm, self.rt, xs[None], ys[None]
+                    ))
+            else:
+                for i in range(0, K, self.n_resident):
+                    cohort = np.arange(i, min(i + self.n_resident, K))
+                    slots = self._ensure_resident(cohort)
+                    tm_c = jax.tree.map(lambda a: a[jnp.asarray(slots)],
+                                        self._ss.tm)
+                    scores[cohort] = np.asarray(
+                        tun_mod.clause_scores_replicated(
+                            self.cfg, tm_c, self.rt, xs[None], ys[None]
+                        ))
+            self.tuner.set_ranking(
+                tun_mod.rank_from_scores(
+                    scores, np.asarray(tm_mod.clause_polarity(self.cfg))
+                ),
+                tun_mod.weights_from_scores(
+                    scores, self.sc.tunable.weight_bits
+                ),
+                score=scores,
+            )
+        return scores
 
     # -- analysis + the Fig-3 policy loop -----------------------------------
 
@@ -982,6 +1153,11 @@ class TMService:
             trained = self.drain(budget, on_chunk)
             self._ps.since += trained
             out = self._maybe_analyze()
+            if self.tuner is not None and self.sc.tunable.adapt:
+                # SLO pressure valve (§16): post-drain queue depth is the
+                # observed backlog — deep queues shed serve compute, light
+                # queues restore it (never above the configured budget).
+                self.tuner.update(self.buffered)
         if out is None:
             return TickReport(trained, None,
                               np.zeros(self.n_replicas, dtype=bool))
@@ -1059,9 +1235,21 @@ class TMService:
                 "router": router_state,
                 "history": {"steps": hsteps, "acc": haccs},
             }
+            has_tun = self.tuner is not None and self.tuner.calibrated
+            if has_tun:
+                tree["tunable"] = {
+                    "order": self.tuner.order,
+                    "score": self.tuner.score,
+                    "weights": self.tuner.weights,  # None when unit
+                }
             extra = {
                 "service": self._service_manifest(),
                 "has_best_state": best is not None,
+                "has_tunable": has_tun,
+                "tunable_weighted": has_tun and self.tuner.weights is not None,
+                "tunable_scored": has_tun and self.tuner.score is not None,
+                "tunable_budget": (float(self.tuner.budget)
+                                   if self.tuner is not None else None),
             }
             if step is None:
                 step = int(self.steps.max(initial=0))
@@ -1094,6 +1282,8 @@ class TMService:
                 "analyze_every": self.policy.analyze_every,
                 "rollback_threshold": self.policy.rollback_threshold,
             },
+            "tunable": (None if sc.tunable is None
+                        else dataclasses.asdict(sc.tunable)),
         }
 
     def load(self, directory: str, *, step: Optional[int] = None) -> None:
@@ -1118,6 +1308,7 @@ class TMService:
                     "datapath — ring-buffer rows are not interchangeable"
                 )
             has_best = bool(man["extra"].get("has_best_state"))
+            has_tun = bool(man["extra"].get("has_tunable"))
             template = {
                 "ss": self._ss,
                 "keys": 0,
@@ -1130,6 +1321,14 @@ class TMService:
                 "router": {"dropped": 0, "flushes": 0},
                 "history": {"steps": 0, "acc": 0},
             }
+            if has_tun:
+                template["tunable"] = {
+                    "order": 0,
+                    "score": (0 if man["extra"].get("tunable_scored")
+                              else None),
+                    "weights": (0 if man["extra"].get("tunable_weighted")
+                                else None),
+                }
             tree, man = ckpt_mod.restore(directory, template, step=step,
                                          device=False)
             self.rt = jax.tree.map(jnp.asarray, tree["rt"])
@@ -1158,6 +1357,27 @@ class TMService:
                 (np.asarray(hsteps[i]), np.asarray(haccs[i]))
                 for i in range(len(hsteps))
             ]
+            if self.tuner is not None:
+                # Ranks are per-replica durable state (§16): a calibrated
+                # checkpoint restores them; an uncalibrated one resets the
+                # controller (the checkpoint defines the complete state).
+                if has_tun:
+                    tun = tree["tunable"]
+                    self.tuner.set_ranking(
+                        np.asarray(tun["order"], dtype=np.int32),
+                        (None if tun["weights"] is None
+                         else np.asarray(tun["weights"], dtype=np.int32)),
+                        score=(None if tun["score"] is None
+                               else np.asarray(tun["score"],
+                                               dtype=np.int32)),
+                    )
+                else:
+                    self.tuner.order = None
+                    self.tuner.weights = None
+                    self.tuner.score = None
+                saved_b = man["extra"].get("tunable_budget")
+                if saved_b is not None:
+                    self.tuner.budget = float(saved_b)
             ss_K, keys_K = tree["ss"], tree["keys"]
             with self.router.lock:
                 self.router.dropped[:] = np.asarray(
@@ -1232,6 +1452,8 @@ class TMService:
             mesh=mesh,
             resident=(meta["resident"] if resident == "saved"
                       else resident),
+            tunable=(None if meta.get("tunable") is None
+                     else tun_mod.TunableConfig(**meta["tunable"])),
         )
         svc = cls(cfg, tm_mod.init_state(cfg), sc,
                   eval_x=eval_x, eval_y=eval_y)

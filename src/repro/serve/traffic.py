@@ -201,6 +201,8 @@ class TrafficResult:
     submit_lat_s: np.ndarray         # [offers] f64 — per-submit wall times
     serve_lat_s: np.ndarray          # [probes] f64 — per-probe wall times
     accepted_mask: list              # per producer: [n] bool, offer order
+    tick_budget: Optional[np.ndarray] = None  # [T] f64 — tuner budget after
+    # each tick (None unless the service carries a §16 TuneController)
 
     @property
     def ticks(self) -> int:
@@ -284,6 +286,7 @@ def run_threaded(
         t.start()
 
     tick_trained: list[np.ndarray] = []
+    tick_budget: list[float] = []
     fault_tick: Optional[int] = None
     analyses = 0
     consumed = 0
@@ -301,6 +304,8 @@ def run_threaded(
             fault_tick = len(tick_trained)
         rep = svc.tick()
         tick_trained.append(np.asarray(rep.trained, dtype=np.int64))
+        if getattr(svc, "tuner", None) is not None:
+            tick_budget.append(float(svc.tuner.budget))
         consumed += int(tick_trained[-1].sum())
         if rep.accuracy is not None:
             analyses += 1
@@ -329,6 +334,8 @@ def run_threaded(
         rollbacks=svc.rollbacks.copy(),
         submit_lat_s=np.asarray(sorted(v for ls in submit_lat for v in ls)),
         serve_lat_s=np.asarray(sorted(v for ls in serve_lat for v in ls)),
+        tick_budget=(np.asarray(tick_budget, dtype=np.float64)
+                     if tick_budget else None),
         accepted_mask=accepted_mask,
     )
 

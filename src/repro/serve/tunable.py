@@ -1,0 +1,397 @@
+"""Runtime-tunable serving: clause ranking, budgeted inference, early exit.
+
+"Runtime Tunable Tsetlin Machines for Edge Inference on eFPGAs" (PAPERS.md)
+shows a trained TM's serve cost can be traded against accuracy *at runtime
+without retraining*: rank clauses by their vote contribution, serve from
+the top-m ranked subset, and stop the class vote once its outcome is
+provably decided. This module is that knob for the fleet (DESIGN.md §16),
+in four deterministic pieces:
+
+* **Ranking** — :func:`clause_scores` / :func:`clause_scores_replicated`
+  score every clause's net helpful vote contribution over a calibration
+  set (one batch contraction on the trained TA banks, per replica on the
+  [K] plane); :func:`rank_from_scores` turns scores into a per-class
+  permutation of the clause axis (descending score, ties by clause index
+  — deterministic for a fixed TA bank and calibration set).
+* **Budgeted serve** — a budget b elects the top ``m = ceil(b·J)`` ranked
+  clauses per class; the kernel contract's ``clause_eval_batch_pruned*``
+  entries contract only the compacted include bank, so compute shrinks
+  with the budget. :func:`weights_from_scores` optionally derives small
+  integer vote weights from the same calibration scores.
+* **Early-exit voting** — :func:`predict_pruned_replicated_host` chunks
+  the ranked list into groups and stops once every request's class-sum
+  margin provably exceeds the remaining groups' maximum swing (bounded by
+  the remaining elected clauses' signed weight sums). Exit never changes
+  a prediction: the bound is conservative, so early-exit ON is bitwise
+  identical to early-exit OFF at the same budget — it only changes how
+  many clause groups were evaluated (returned per request).
+* **TuneController** — the per-service policy object `TMService` carries
+  when built with ``ServiceConfig(tunable=...)``: holds the calibrated
+  ranks/weights (host-side per-replica state — survives residency
+  eviction and rides ``save``/``restore``), the current budget, and the
+  queue-depth adaptation rule ``tick`` applies under load.
+
+The correctness contract (pinned by tests/test_tunable.py): budget=100%,
+unit weights, early-exit disabled is **bitwise identical** to the plain
+serving path — the full ranking is a permutation, int32 vote sums commute,
+and the argmax sees identical votes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tm as tm_mod
+from repro.core.tm import TMConfig, TMRuntime, TMState
+
+
+# ---------------------------------------------------------------------------
+# Clause ranking (calibration).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=0)
+def clause_scores(
+    cfg: TMConfig, state: TMState, rt: TMRuntime,
+    xs: jax.Array, ys: jax.Array,
+) -> jax.Array:
+    """Net helpful vote contribution of every clause. [C, J] int32.
+
+    For calibration row b with label y, clause (c, j)'s vote contribution
+    to class c's sum is ``fired · polarity``; it is *helpful* when it
+    pushes the correct decision — positive contribution when y == c,
+    negative when y != c:
+
+        score[c, j] = sum_b fired[b, c, j] · pol[j] · (+1 if y_b == c else -1)
+
+    One batch-first clause contraction over the whole calibration set
+    (clause outputs masked by the runtime's clause mask, inference
+    semantics — empty clauses score 0). Integer counts: deterministic.
+    """
+    clauses, _ = tm_mod.forward_batch(cfg, state, rt, xs, training=False)
+    pol = tm_mod.clause_polarity(cfg)                          # [J]
+    agree = jnp.where(
+        ys[:, None] == jnp.arange(cfg.max_classes)[None, :], 1, -1
+    ).astype(jnp.int32)                                        # [B, C]
+    return jnp.sum(
+        clauses.astype(jnp.int32) * pol * agree[..., None], axis=0
+    )
+
+
+@partial(jax.jit, static_argnums=0)
+def clause_scores_replicated(
+    cfg: TMConfig, state: TMState, rt: TMRuntime,
+    xs: jax.Array, ys: jax.Array,
+) -> jax.Array:
+    """Per-replica clause scores on the [R] plane. [R, C, J] int32.
+
+    The fleet calibration pass: xs [D, B, ...] / ys [D, B] with the usual
+    ``r % D`` data-stream rule — ONE replicated clause contraction scores
+    every replica's bank (replica r reproduces :func:`clause_scores` on
+    stream r % D exactly; the sums are integer).
+    """
+    clauses, _ = tm_mod.forward_batch_replicated(
+        cfg, state, rt, xs, training=False
+    )                                                          # [R, B, C, J]
+    R = clauses.shape[0]
+    D = ys.shape[0]
+    pol = tm_mod.clause_polarity(cfg)
+    agree = jnp.where(
+        ys[..., None] == jnp.arange(cfg.max_classes)[None, None, :], 1, -1
+    ).astype(jnp.int32)                                        # [D, B, C]
+    agree = jnp.tile(agree, (R // D, 1, 1))                    # [R, B, C]
+    return jnp.sum(
+        clauses.astype(jnp.int32) * pol * agree[..., None], axis=1
+    )
+
+
+def rank_from_scores(score, polarity=None) -> np.ndarray:
+    """Scores [.., C, J] -> ranking [.., C, J] int32: clause ids, best first.
+
+    Descending score, ties broken by ascending clause index (stable sort
+    on the negated integer scores) — every clause appears exactly once
+    per class, and the order is a pure function of the scores.
+
+    With ``polarity`` ([J], +-1) the ranking is POLARITY-BALANCED: the
+    best positive and best negative clauses interleave, so any top-m
+    prefix keeps (near-)equal numbers of for- and against-voters. A
+    plain score sort prunes the two polarities unevenly and de-calibrates
+    the +-vote sums across classes — measured on the f = 784 workload it
+    costs 4-7 accuracy points at budget 25% that balancing gets back
+    (DESIGN.md §16). Calibrated serving always ranks balanced.
+    """
+    s = np.asarray(score)
+    if polarity is None:
+        return np.argsort(-s, axis=-1, kind="stable").astype(np.int32)
+    pol = np.asarray(polarity).reshape(-1)
+    pos = np.nonzero(pol > 0)[0]
+    neg = np.nonzero(pol <= 0)[0]
+    po = pos[np.argsort(-s[..., pos], axis=-1, kind="stable")]
+    ne = neg[np.argsort(-s[..., neg], axis=-1, kind="stable")]
+    out = np.empty(s.shape, dtype=np.int32)
+    k = min(len(pos), len(neg))
+    out[..., 0:2 * k:2] = po[..., :k]
+    out[..., 1:2 * k:2] = ne[..., :k]
+    if len(pos) > k:
+        out[..., 2 * k:] = po[..., k:]
+    elif len(neg) > k:
+        out[..., 2 * k:] = ne[..., k:]
+    return out
+
+
+def weights_from_scores(score, weight_bits: int) -> Optional[np.ndarray]:
+    """Integer vote weights in [1, 2^bits - 1] from calibration scores.
+
+    Linear in the clamped-positive score, per class, all-integer
+    arithmetic (deterministic): the top-scoring clause of each class gets
+    the full ``2^bits - 1``, non-positive scores get 1 — a pruned *and*
+    weighted vote emphasises the clauses that carried the calibration
+    set. ``weight_bits <= 0`` returns None (unit weights).
+    """
+    if weight_bits <= 0:
+        return None
+    s = np.maximum(np.asarray(score, dtype=np.int64), 0)
+    wmax = (1 << weight_bits) - 1
+    peak = np.maximum(s.max(axis=-1, keepdims=True), 1)
+    return (1 + (s * (wmax - 1)) // peak).astype(np.int32)
+
+
+def m_for_budget(budget: float, n_clauses: int) -> int:
+    """Compute budget (fraction of clauses) -> elected clauses per class."""
+    if not 0.0 < budget <= 1.0:
+        raise ValueError(f"budget must be in (0, 1], got {budget}")
+    return max(1, min(n_clauses, math.ceil(budget * n_clauses)))
+
+
+# ---------------------------------------------------------------------------
+# Budgeted + early-exit prediction (host driver over the pruned kernels).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=0)
+def _votes_pruned_replicated(cfg, state, rt, xs, sel, weights):
+    """One clause group's partial class sums [R, B, C] int32."""
+    _, votes = tm_mod.forward_batch_pruned_replicated(
+        cfg, state, rt, xs, sel, weights
+    )
+    return votes
+
+
+_NEG = np.int64(-1) << 40   # "inactive class" vote floor (host-side int64)
+
+
+def predict_pruned_replicated_host(
+    cfg: TMConfig,
+    state: TMState,          # leaves [R, ...]
+    rt: TMRuntime,
+    xs: jax.Array,           # [D, B, ...] — replica r reads batch r % D
+    order: np.ndarray,       # [R, C, J] int32 — per-replica rankings
+    weights: Optional[np.ndarray],  # [R, C, J] int32 magnitudes (None = unit)
+    m: int,                  # elected ranked clauses per class
+    *,
+    group: Optional[int] = None,    # early-exit group size (None = off)
+) -> tuple[np.ndarray, np.ndarray]:
+    """Budgeted fleet prediction with optional early-exit voting.
+
+    Returns ``(preds [R, B] int32, evaluated [R, B] int32)`` where
+    ``evaluated`` counts the ranked clause slots (per class) each request
+    actually needed — ``m`` exactly when early exit is off.
+
+    Early exit evaluates the elected clauses in ranked groups of
+    ``group``. After each group, with current masked class sums ``v`` and
+    leader ``t``, the remaining groups can raise class c's sum by at most
+    ``up[c]`` (sum of remaining elected clauses' positive signed weights)
+    and lower it by at most ``down[c]``; a request is decided once
+
+        v[t] - down[t] > max_{c != t} (v[c] + up[c])
+
+    — then the final argmax is provably ``t`` no matter how the remaining
+    clauses fire (strict inequality, so tie-breaking cannot differ
+    either). Decided requests stop counting; the group loop stops
+    launching contractions once EVERY request in the batch is decided, so
+    single-request probes (the traffic harness) stop computing too.
+    """
+    R, C, J = order.shape
+    sel_full = jnp.asarray(order[:, :, :m])
+    w_dev = None if weights is None else jnp.asarray(weights)
+    if group is None or group >= m:
+        preds = np.asarray(tm_mod.predict_batch_pruned_replicated(
+            cfg, state, rt, xs, sel_full, w_dev
+        ))
+        return preds, np.full(preds.shape, m, dtype=np.int32)
+
+    # Signed weights of the elected clauses, in ranked order: [R, C, m].
+    pol = np.where(np.arange(J) % 2 == 0, 1, -1).astype(np.int64)
+    cmask = np.asarray(rt.clause_mask).astype(np.int64)
+    mag = (np.ones((R, C, J), dtype=np.int64) if weights is None
+           else np.asarray(weights, dtype=np.int64))
+    signed = np.take_along_axis(mag * pol * cmask, order, axis=-1)[:, :, :m]
+    up_tail = np.maximum(signed, 0)[:, :, ::-1].cumsum(axis=-1)[:, :, ::-1]
+    dn_tail = np.maximum(-signed, 0)[:, :, ::-1].cumsum(axis=-1)[:, :, ::-1]
+
+    class_mask = np.asarray(rt.class_mask)
+    B = xs.shape[1]
+    votes = np.zeros((R, B, C), dtype=np.int64)
+    decided = np.zeros((R, B), dtype=bool)
+    preds = np.zeros((R, B), dtype=np.int32)
+    evaluated = np.zeros((R, B), dtype=np.int32)
+    ridx = np.arange(R)[:, None]
+
+    edges = list(range(0, m, group)) + [m]
+    for gi in range(len(edges) - 1):
+        lo, hi = edges[gi], edges[gi + 1]
+        sel_g = jnp.asarray(np.ascontiguousarray(order[:, :, lo:hi]))
+        votes += np.asarray(
+            _votes_pruned_replicated(cfg, state, rt, xs, sel_g, w_dev),
+            dtype=np.int64,
+        )
+        evaluated[~decided] += hi - lo
+        masked = np.where(class_mask[None, None, :], votes, _NEG)
+        top = masked.argmax(axis=-1)                       # [R, B]
+        if hi == m:
+            preds[~decided] = top[~decided]
+            decided[:] = True
+            break
+        # Remaining-swing bound after this group ([R, C] per replica).
+        rem_up = up_tail[:, :, hi] if hi < m else np.zeros((R, C), np.int64)
+        rem_dn = dn_tail[:, :, hi] if hi < m else np.zeros((R, C), np.int64)
+        floor = (np.take_along_axis(masked, top[..., None], -1)[..., 0]
+                 - rem_dn[ridx, top])                      # [R, B]
+        rival = masked + rem_up[:, None, :]
+        np.put_along_axis(rival, top[..., None], _NEG, axis=-1)
+        newly = (floor > rival.max(axis=-1)) & ~decided
+        preds[newly] = top[newly]
+        decided |= newly
+        if decided.all():
+            break
+    return preds, evaluated
+
+
+# ---------------------------------------------------------------------------
+# The service-facing controller.
+# ---------------------------------------------------------------------------
+
+
+class ServeAux(NamedTuple):
+    """What a budgeted serve actually computed (per call)."""
+
+    budget: float        # effective compute budget (fraction of clauses)
+    m: int               # elected ranked clauses per class
+    sel: np.ndarray      # [K, C, m] int32 — the clause ids eligible to run
+    evaluated: np.ndarray  # [K, B] int32 — ranked slots evaluated per request
+
+
+@dataclasses.dataclass(frozen=True)
+class TunableConfig:
+    """The ``ServiceConfig(tunable=...)`` knob set (DESIGN.md §16).
+
+    ``budget`` is the default (and maximum) serve budget as a fraction of
+    the provisioned clauses; ``weight_bits`` > 0 folds calibrated integer
+    vote weights in; ``early_exit``/``group`` chunk the ranked vote and
+    stop once the margin is provably decided. With ``adapt`` on,
+    ``TMService.tick`` moves the live budget between ``min_budget`` and
+    ``budget`` by factors of ``step``: halve when any replica's observed
+    queue depth reaches ``high_water`` (shed serve compute so the
+    consumer loop catches up), recover when the deepest queue falls to
+    ``low_water``.
+    """
+
+    budget: float = 1.0
+    weight_bits: int = 0
+    early_exit: bool = False
+    group: int = 16
+    adapt: bool = False
+    min_budget: float = 0.125
+    high_water: int = 32
+    low_water: int = 4
+    step: float = 2.0
+
+    def __post_init__(self):
+        if not 0.0 < self.budget <= 1.0:
+            raise ValueError("budget must be in (0, 1]")
+        if not 0.0 < self.min_budget <= self.budget:
+            raise ValueError("min_budget must be in (0, budget]")
+        if self.early_exit and self.group < 1:
+            raise ValueError("early-exit group must be >= 1")
+        if self.step <= 1.0:
+            raise ValueError("step must be > 1")
+
+
+class TuneController:
+    """Calibrated ranks/weights + the live budget, for one service.
+
+    Host-side per-replica state ([K, C, J] numpy arrays): orthogonal to
+    residency (eviction moves device planes; the ranking of an evicted
+    replica stays put) and serialized into the service checkpoint, so a
+    restored fleet serves at the same budget from the same ranking
+    without recalibrating.
+    """
+
+    def __init__(self, tc: TunableConfig, n_replicas: int, n_clauses: int):
+        self.tc = tc
+        self.n_replicas = n_replicas
+        self.n_clauses = n_clauses
+        self.budget = float(tc.budget)
+        self.order: Optional[np.ndarray] = None    # [K, C, J] int32
+        self.weights: Optional[np.ndarray] = None  # [K, C, J] int32
+        self.score: Optional[np.ndarray] = None    # [K, C, J] int32
+
+    @property
+    def calibrated(self) -> bool:
+        return self.order is not None
+
+    @property
+    def active(self) -> bool:
+        """Does default serving need the budgeted path at all?"""
+        return (self.budget < 1.0 or self.tc.weight_bits > 0
+                or self.tc.early_exit)
+
+    def set_ranking(
+        self, order: np.ndarray, weights: Optional[np.ndarray],
+        score: Optional[np.ndarray] = None,
+    ) -> None:
+        order = np.asarray(order, dtype=np.int32)
+        K, J = self.n_replicas, self.n_clauses
+        if order.ndim != 3 or order.shape[0] != K or order.shape[2] != J:
+            raise ValueError(
+                f"ranking must be [replicas={K}, C, clauses={J}], "
+                f"got {order.shape}"
+            )
+        if not np.array_equal(
+            np.sort(order, axis=-1),
+            np.broadcast_to(np.arange(J, dtype=np.int32), order.shape),
+        ):
+            raise ValueError("ranking rows must be permutations of the "
+                             "clause axis")
+        self.order = order
+        self.weights = (None if weights is None
+                        else np.asarray(weights, dtype=np.int32))
+        self.score = None if score is None else np.asarray(score)
+
+    def m_for(self, budget: Optional[float] = None) -> int:
+        b = self.budget if budget is None else float(budget)
+        return m_for_budget(b, self.n_clauses)
+
+    def update(self, queue_depth) -> float:
+        """One ``tick``'s budget adaptation from observed queue depth.
+
+        ``queue_depth`` is the [K] outstanding-rows vector (staged +
+        buffered); the deepest lane governs — one overwhelmed replica is
+        an SLO breach even if the mean is healthy. Returns the (possibly
+        unchanged) live budget.
+        """
+        tc = self.tc
+        if not tc.adapt:
+            return self.budget
+        depth = int(np.max(queue_depth)) if np.size(queue_depth) else 0
+        if depth >= tc.high_water:
+            self.budget = max(tc.min_budget, self.budget / tc.step)
+        elif depth <= tc.low_water:
+            self.budget = min(tc.budget, self.budget * tc.step)
+        return self.budget

@@ -187,11 +187,10 @@ def test_replica_shardings_specs():
     sh = shard_mod.replica_shardings(tree, mesh, n_replicas=8)
     assert sh["state"].spec == PS("data")
     assert sh["scalar"].spec == PS()
-    # the legacy no-n_replicas form is deprecated (it shards ANY
-    # divisible leading dim, scattering D | R stream leaves)
-    with pytest.warns(DeprecationWarning, match="n_replicas"):
-        sh_legacy = shard_mod.replica_shardings(tree, mesh)
-    assert sh_legacy["state"].spec == PS("data")
+    # the old no-n_replicas form sharded ANY divisible leading dim
+    # (scattering D | R stream leaves) — now a hard error
+    with pytest.raises(TypeError, match="n_replicas"):
+        shard_mod.replica_shardings(tree, mesh)
 
 
 def test_replicate_state_matches_init():

@@ -397,13 +397,11 @@ def test_replica_shardings_grid_major_device_local():
     assert sh["stream"].spec == PS()   # replicated: gather stays local
     assert sh["keys"].spec == PS()
     assert sh["scalar"].spec == PS()
-    # legacy behaviour (no n_replicas) still shards any divisible leading
-    # dim — exactly the D | R stream scattering the grid-major rule
-    # exists to prevent, so the legacy form is deprecated and warns
-    if n_dev > 1:
-        with pytest.warns(DeprecationWarning, match="n_replicas"):
-            sh_legacy = shard_mod.replica_shardings(tree, mesh)
-        assert sh_legacy["stream"].spec == PS("data")
+    # the old no-n_replicas form guessed by divisibility — exactly the
+    # D | R stream scattering the grid-major rule exists to prevent —
+    # and is now a hard error (deprecated through PR 8)
+    with pytest.raises(TypeError, match="n_replicas"):
+        shard_mod.replica_shardings(tree, mesh)
 
 
 def test_crossval_mesh_sharded_sweep_bitwise_equal():

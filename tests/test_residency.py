@@ -185,8 +185,12 @@ def test_serve_replicas_matches_full_serve():
 
 def test_residency_rejects_wholesale_state_and_full_serve():
     svc = _service(2, with_eval=False)
-    with pytest.raises(ValueError, match="serve_replicas"):
+    # the refusal must name BOTH ways out: serve_replicas for named
+    # members, and the 'resident' knob to cover the fleet
+    with pytest.raises(ValueError) as ei:
         svc.serve(_RNG.random((2, F)) > 0.5)
+    assert "serve_replicas" in str(ei.value)
+    assert "resident" in str(ei.value)
     with pytest.raises(ValueError, match="restore"):
         svc.ss = svc.ss
     with pytest.raises(ValueError, match="resident"):

@@ -1,0 +1,415 @@
+"""Runtime-tunable serving (DESIGN.md §16): ranking, pruning, early exit.
+
+The load-bearing contract is bitwise: budget = 100% with unit weights and
+early exit disabled must equal the existing serve path bit for bit — both
+backends, packed and unpacked, under residency, and across save -> restore.
+Pruning reorders an integer sum (adds commute) and compaction gathers the
+same include rows the full contraction reads, so any drift is a kernel bug,
+not tolerance noise.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TMConfig, init_state
+from repro.core import accuracy as acc_mod
+from repro.core import tm as tm_mod
+from repro.kernels import packing as pack_mod
+from repro.serve import ServiceConfig, TMService, TunableConfig
+from repro.serve import tunable as tun
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency (requirements-dev.txt)
+    HAVE_HYPOTHESIS = False
+
+K, F, C, J, N = 4, 16, 3, 8, 32
+
+_RNG = np.random.default_rng(11)
+X = _RNG.random((40, F)) > 0.5
+Y = _RNG.integers(0, C, 40).astype(np.int32)
+
+
+def _cfg(backend="ref"):
+    return TMConfig(n_features=F, max_classes=C, max_clauses=J,
+                    n_states=N, backend=backend)
+
+
+def _rand_state(cfg, seed=0, replicas=None):
+    """Random-but-legal TA banks: parity needs nontrivial include planes,
+    not trained ones."""
+    rng = np.random.default_rng(seed)
+    shape = (C, J, 2 * F)
+    if replicas is not None:
+        shape = (replicas,) + shape
+    return tm_mod.TMState(ta_state=jnp.asarray(
+        rng.integers(1, 2 * N + 1, shape), dtype=jnp.int8))
+
+
+def _full_perm(rng, replicas=None):
+    """A random FULL permutation ranking [C, J] (or [R, C, J])."""
+    if replicas is None:
+        return np.stack([rng.permutation(J) for _ in range(C)]
+                        ).astype(np.int32)
+    return np.stack([_full_perm(rng) for _ in range(replicas)])
+
+
+# ---------------------------------------------------------------------------
+# Core: full-budget pruned == plain, subset == manual, both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_full_permutation_pruned_bitwise_equals_plain(backend):
+    cfg = _cfg(backend)
+    state = _rand_state(cfg, 1)
+    rt = tm_mod.init_runtime(cfg)
+    xs = jnp.asarray(X)
+    sel = jnp.asarray(_full_perm(np.random.default_rng(2)))
+    want = np.asarray(tm_mod.predict_batch_(cfg, state, rt, xs))
+    got = np.asarray(tm_mod.predict_batch_pruned_(cfg, state, rt, xs, sel))
+    np.testing.assert_array_equal(want, got)
+    # replicated twin, per-replica permutations
+    stR = _rand_state(cfg, 3, replicas=K)
+    selR = jnp.asarray(_full_perm(np.random.default_rng(4), replicas=K))
+    wantR = np.asarray(tm_mod.predict_batch_replicated_(
+        cfg, stR, rt, xs[None]))
+    gotR = np.asarray(tm_mod.predict_batch_pruned_replicated_(
+        cfg, stR, rt, xs[None], selR))
+    np.testing.assert_array_equal(wantR, gotR)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_packed_pruned_bitwise_equals_unpacked_pruned(backend):
+    cfg = _cfg(backend)
+    state = _rand_state(cfg, 5)
+    rt = tm_mod.init_runtime(cfg)
+    sel = jnp.asarray(_full_perm(np.random.default_rng(6))[:, :5])  # m=5
+    xs_p = pack_mod.pack_bits(jnp.asarray(X))    # raw feature words (§13)
+    votes_u = tm_mod.forward_batch_pruned(cfg, state, rt, jnp.asarray(X),
+                                          sel)[1]
+    votes_p = tm_mod.forward_batch_pruned(cfg, state, rt, xs_p, sel)[1]
+    np.testing.assert_array_equal(np.asarray(votes_u), np.asarray(votes_p))
+
+
+def test_pruned_votes_match_manual_subset():
+    """Budget-m votes == hand-built sum over exactly the selected clauses
+    (weighted and unit) — the kernel never reads an unselected clause."""
+    cfg = _cfg()
+    state = _rand_state(cfg, 7)
+    rt = tm_mod.init_runtime(cfg)
+    rng = np.random.default_rng(8)
+    sel = jnp.asarray(_full_perm(rng)[:, :3])                      # m=3
+    weights = jnp.asarray(rng.integers(1, 8, (C, J)), dtype=jnp.int32)
+    clauses, votes = tm_mod.forward_batch(cfg, state, rt, jnp.asarray(X))
+    swt = np.asarray(tm_mod.vote_weights(cfg, rt, weights))        # [C, J]
+    manual = np.zeros((len(X), C), dtype=np.int64)
+    cl = np.asarray(clauses, dtype=np.int64)
+    for c in range(C):
+        for m in range(3):
+            j = int(sel[c, m])
+            manual[:, c] += cl[:, c, j] * swt[c, j]
+    got = tm_mod.forward_batch_pruned(cfg, state, rt, jnp.asarray(X),
+                                      sel, weights)[1]
+    np.testing.assert_array_equal(manual, np.asarray(got))
+
+
+def test_analyze_pruned_full_permutation_equals_analyze():
+    cfg = _cfg()
+    state = _rand_state(cfg, 9)
+    rt = tm_mod.init_runtime(cfg)
+    sel = jnp.asarray(_full_perm(np.random.default_rng(10)))
+    a = float(acc_mod.analyze(cfg, state, rt, jnp.asarray(X),
+                              jnp.asarray(Y)))
+    b = float(acc_mod.analyze_pruned(cfg, state, rt, jnp.asarray(X),
+                                     jnp.asarray(Y), sel))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Ranking: deterministic permutation; weights positive ints
+# ---------------------------------------------------------------------------
+
+
+def test_clause_scores_deterministic_and_rank_is_permutation():
+    cfg = _cfg()
+    state = _rand_state(cfg, 12)
+    rt = tm_mod.init_runtime(cfg)
+    s1 = np.asarray(tun.clause_scores(cfg, state, rt, jnp.asarray(X),
+                                      jnp.asarray(Y)))
+    s2 = np.asarray(tun.clause_scores(cfg, state, rt, jnp.asarray(X),
+                                      jnp.asarray(Y)))
+    np.testing.assert_array_equal(s1, s2)
+    order = tun.rank_from_scores(s1)
+    assert order.shape == (C, J)
+    np.testing.assert_array_equal(np.sort(order, axis=-1),
+                                  np.broadcast_to(np.arange(J), (C, J)))
+
+
+def test_weights_from_scores_bounds():
+    rng = np.random.default_rng(13)
+    score = rng.integers(-50, 50, (K, C, J)).astype(np.int32)
+    assert tun.weights_from_scores(score, 0) is None
+    w = tun.weights_from_scores(score, 4)
+    assert w.dtype == np.int32
+    assert w.min() >= 1 and w.max() <= 15          # [1, 2^bits - 1]
+    # the per-class peak score always gets the max weight
+    flat_peak = np.take_along_axis(
+        w, score.argmax(axis=-1)[..., None], axis=-1)
+    assert (flat_peak == 15).all()
+
+
+def test_m_for_budget():
+    assert tun.m_for_budget(1.0, J) == J
+    assert tun.m_for_budget(0.5, J) == J // 2
+    assert tun.m_for_budget(1e-9, J) == 1           # floor at one clause
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            tun.m_for_budget(bad, J)
+
+
+# ---------------------------------------------------------------------------
+# Early exit: identical predictions, fewer clauses evaluated
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("group", [1, 2, 3, 8])
+def test_early_exit_predictions_bitwise_equal_no_exit(group):
+    cfg = _cfg()
+    rt = tm_mod.init_runtime(cfg)
+    stR = _rand_state(cfg, 14, replicas=K)
+    rng = np.random.default_rng(15)
+    order = _full_perm(rng, replicas=K)
+    weights = rng.integers(1, 8, (K, C, J)).astype(np.int32)
+    for m in (J, J // 2, 1):
+        base, ev0 = tun.predict_pruned_replicated_host(
+            cfg, stR, rt, np.asarray(X)[None], order, weights, m,
+            group=None)
+        got, ev = tun.predict_pruned_replicated_host(
+            cfg, stR, rt, np.asarray(X)[None], order, weights, m,
+            group=group)
+        np.testing.assert_array_equal(base, got)
+        assert (ev0 == m).all()
+        assert ev.max() <= m and ev.min() >= min(group, m)
+    # at m = J, some request should decide before the last group
+    # (not guaranteed in general, but overwhelmingly likely here)
+    if group <= 2:
+        assert (ev < J).any()
+
+
+def test_early_exit_respects_class_mask():
+    """Inactive classes can neither win nor keep the exit bound alive."""
+    cfg = _cfg()
+    rt = tm_mod.init_runtime(cfg)
+    rt = rt._replace(class_mask=jnp.asarray([True, False, True]))
+    stR = _rand_state(cfg, 16, replicas=K)
+    order = _full_perm(np.random.default_rng(17), replicas=K)
+    p0, _ = tun.predict_pruned_replicated_host(
+        cfg, stR, rt, np.asarray(X)[None], order, None, J, group=None)
+    p1, _ = tun.predict_pruned_replicated_host(
+        cfg, stR, rt, np.asarray(X)[None], order, None, J, group=2)
+    np.testing.assert_array_equal(p0, p1)
+    assert not (p0 == 1).any()                      # masked class never wins
+
+
+# ---------------------------------------------------------------------------
+# Service integration: parity across backends x packed x residency x
+# save/restore; adapt; error guidance
+# ---------------------------------------------------------------------------
+
+
+def _service(backend="ref", *, packed=False, resident=None, tunable=None):
+    cfg = _cfg(backend)
+    sc = ServiceConfig(replicas=K, buffer_capacity=64, chunk=8,
+                       s=3.0, T=10, seed=0, packed=packed,
+                       resident=resident, tunable=tunable)
+    return TMService(cfg, init_state(cfg), sc, eval_x=X, eval_y=Y)
+
+
+def _train(svc, n=24):
+    for i in range(n):
+        svc.submit_rows(X[i % len(X)], np.full(K, Y[i % len(Y)]))
+        svc.tick()
+    svc.flush()
+    return svc
+
+
+@pytest.fixture(scope="module")
+def trained_dirs():
+    """One trained checkpoint per (backend, packed) combo — the plain
+    services whose serve output is the parity oracle."""
+    out = {}
+    for backend in ("ref", "pallas"):
+        for packed in (False, True):
+            svc = _train(_service(backend, packed=packed))
+            d = tempfile.mkdtemp()
+            svc.save(d)
+            out[(backend, packed)] = (d, svc.serve(X))
+    return out
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("packed", [False, True])
+@pytest.mark.parametrize("resident", [None, 2])
+def test_service_full_budget_parity(trained_dirs, backend, packed, resident):
+    """budget=100%, unit weights, no early exit == the pre-§16 serve path
+    bit for bit, through every datapath and the residency plane."""
+    d, base = trained_dirs[(backend, packed)]
+    svc = _service(backend, packed=packed, resident=resident,
+                   tunable=TunableConfig(budget=1.0))
+    svc.load(d)
+    svc.calibrate()
+    if resident is None:
+        np.testing.assert_array_equal(svc.serve(X, budget=1.0), base)
+    got = svc.serve_replicas(np.arange(K), X, budget=1.0)
+    np.testing.assert_array_equal(got, base)
+
+
+def test_service_parity_across_save_restore(trained_dirs):
+    d, base = trained_dirs[("ref", False)]
+    svc = _service(tunable=TunableConfig(budget=0.5, weight_bits=4))
+    svc.load(d)
+    svc.calibrate()
+    preds = svc.serve(X)            # active tunable: budgeted by default
+    d2 = tempfile.mkdtemp()
+    svc.save(d2)
+    svc2 = TMService.restore(d2, eval_x=X, eval_y=Y)
+    assert svc2.tuner.calibrated
+    np.testing.assert_array_equal(svc2.tuner.order, svc.tuner.order)
+    np.testing.assert_array_equal(svc2.tuner.weights, svc.tuner.weights)
+    np.testing.assert_array_equal(svc2.serve(X), preds)
+    # an explicit budget still serves through the restored ranks/weights:
+    # pre- and post-restore full-budget serves must agree bit for bit
+    np.testing.assert_array_equal(svc2.serve(X, budget=1.0),
+                                  svc.serve(X, budget=1.0))
+
+
+def test_service_ranks_survive_eviction(trained_dirs):
+    """Rankings are host-side per-replica state: serving a cohort after
+    its members were evicted and reactivated uses the same ranks."""
+    d, _ = trained_dirs[("ref", False)]
+    tc = TunableConfig(budget=0.5, early_exit=True, group=2)
+    svc = _service(resident=2, tunable=tc)
+    svc.load(d)
+    svc.calibrate()
+    first = svc.serve_replicas(np.arange(K), X)
+    # touch every replica so each one has been evicted at least once
+    for r in range(K):
+        svc.serve_replicas([r], X[:2])
+    again = svc.serve_replicas(np.arange(K), X)
+    np.testing.assert_array_equal(first, again)
+
+
+def test_service_uncalibrated_and_unconfigured_errors(trained_dirs):
+    d, _ = trained_dirs[("ref", False)]
+    plain = _service()
+    plain.load(d)
+    with pytest.raises(ValueError, match="tunable"):
+        plain.serve(X, budget=0.5)
+    armed = _service(tunable=TunableConfig(budget=0.5))
+    armed.load(d)
+    with pytest.raises(ValueError, match="calibrate"):
+        armed.serve(X)
+    with pytest.raises(ValueError, match="budget"):
+        plain.serve(X, return_aux=True)
+
+
+def test_load_of_uncalibrated_checkpoint_resets_tuner(trained_dirs):
+    d, _ = trained_dirs[("ref", False)]
+    svc = _service(tunable=TunableConfig(budget=1.0))
+    svc.load(d)
+    svc.calibrate()
+    assert svc.tuner.calibrated
+    svc.load(d)                      # d was saved without a tuner
+    assert not svc.tuner.calibrated
+
+
+def test_adapt_sheds_and_recovers_budget(trained_dirs):
+    d, _ = trained_dirs[("ref", False)]
+    tc = TunableConfig(budget=1.0, adapt=True, min_budget=0.25,
+                       high_water=4, low_water=1, step=2.0)
+    svc = _service(tunable=tc)
+    svc.load(d)
+    svc.calibrate()
+    for i in range(12):
+        svc.submit_rows(X[i], np.full(K, Y[i]))
+    svc.tick(max_points=1)           # deep queue after a starved drain
+    assert svc.tuner.budget == 0.5
+    for _ in range(10):
+        svc.tick()                   # queue drains; budget climbs home
+    assert svc.tuner.budget == 1.0
+
+
+def test_traffic_result_logs_budget(trained_dirs):
+    from repro.serve import SCENARIOS, make_scripts, run_threaded
+    d, _ = trained_dirs[("ref", False)]
+    tc = TunableConfig(budget=1.0, adapt=True, min_budget=0.25,
+                       high_water=16, low_water=1)
+    svc = _service(tunable=tc)
+    svc.load(d)
+    svc.calibrate()
+    scen = SCENARIOS["steady"]
+    res = run_threaded(svc, make_scripts(scen, X, Y, C, K, seed=3),
+                       scenario=scen, pace=0.0, seed=3)
+    assert res.tick_budget is not None
+    assert len(res.tick_budget) == res.ticks
+    assert (res.tick_budget >= tc.min_budget).all()
+    assert (res.tick_budget <= 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (optional dev dependency)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           shape=st.tuples(st.integers(1, 4), st.integers(2, 12)))
+    def test_property_ranking_is_deterministic_permutation(seed, shape):
+        """Every clause ranked exactly once; same scores -> same ranks."""
+        c, j = shape
+        rng = np.random.default_rng(seed)
+        score = rng.integers(-100, 100, (c, j)).astype(np.int32)
+        o1 = tun.rank_from_scores(score)
+        o2 = tun.rank_from_scores(score.copy())
+        np.testing.assert_array_equal(o1, o2)
+        np.testing.assert_array_equal(
+            np.sort(o1, axis=-1), np.broadcast_to(np.arange(j), (c, j)))
+        # ties break toward the lower clause index (stable sort)
+        flat = score.reshape(-1, j)
+        of = o1.reshape(-1, j)
+        for row in range(flat.shape[0]):
+            s, o = flat[row], of[row]
+            for a, b in zip(o[:-1], o[1:]):
+                assert (s[a] > s[b]) or (s[a] == s[b] and a < b)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           budget=st.floats(0.01, 1.0),
+           group=st.one_of(st.none(), st.integers(1, 8)))
+    def test_property_budget_never_evaluates_outside_top_m(
+            seed, budget, group):
+        """At ANY budget the serve path touches only the top-m ranked
+        clauses: the aux sel is exactly order[:, :, :m] and per-request
+        evaluated counts never exceed m."""
+        cfg = _cfg()
+        rt = tm_mod.init_runtime(cfg)
+        stR = _rand_state(cfg, seed, replicas=K)
+        rng = np.random.default_rng(seed)
+        order = _full_perm(rng, replicas=K)
+        m = tun.m_for_budget(budget, J)
+        preds, evaluated = tun.predict_pruned_replicated_host(
+            cfg, stR, rt, np.asarray(X)[None], order, None, m, group=group)
+        assert evaluated.max() <= m
+        # the compacted contraction IS the top-m gather: votes must match
+        # a from-scratch evaluation restricted to order[:, :, :m]
+        sel = jnp.asarray(order[:, :, :m])
+        want = np.asarray(tm_mod.predict_batch_pruned_replicated_(
+            cfg, stR, rt, jnp.asarray(X)[None], sel))
+        np.testing.assert_array_equal(preds, want)
