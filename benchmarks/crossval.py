@@ -76,13 +76,17 @@ def sweep_bench(n_orderings: int, seed: int = 0, *, cfg=None, osets=None,
     s_grid = jnp.asarray(s_values, jnp.float32)
     T_grid = jnp.asarray(T_values, jnp.int32)
 
-    legacy = lambda: hpsearch.grid_search_device(
-        cfg, s_grid, T_grid, off, val, keys, n_epochs
-    )
+    def legacy():
+        return hpsearch.grid_search_device(
+            cfg, s_grid, T_grid, off, val, keys, n_epochs
+        )
+
     run = CrossValRun(cfg)
-    engine = lambda: run.sweep(
-        *off, *val, s_values, T_values, n_epochs=n_epochs, seed=seed
-    ).val_accuracy
+
+    def engine():
+        return run.sweep(
+            *off, *val, s_values, T_values, n_epochs=n_epochs, seed=seed
+        ).val_accuracy
 
     # Interleave so background host load skews both paths equally.
     t_eng, t_leg = float("inf"), float("inf")
@@ -121,9 +125,13 @@ def system_bench(n_orderings: int, n_cycles: int = 16, seed: int = 0) -> dict:
     legacy_fn = jax.vmap(
         lambda st, ss, k: mgr.run_system(CFG, sys_cfg, st, rt, ss, schedule, k)
     )
-    legacy = lambda: legacy_fn(states, sets, keys)[1]
+    def legacy():
+        return legacy_fn(states, sets, keys)[1]
+
     run = CrossValRun(CFG)
-    engine = lambda: run.system(sys_cfg, states, rt, sets, schedule, keys).accuracies
+
+    def engine():
+        return run.system(sys_cfg, states, rt, sets, schedule, keys).accuracies
 
     t_eng, t_leg = float("inf"), float("inf")
     acc_eng = acc_leg = None

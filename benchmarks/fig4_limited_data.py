@@ -9,7 +9,6 @@ Paper claims (iris): starting accuracies ~83% offline / 79.5% validation /
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import manager as mgr

@@ -12,7 +12,6 @@ classes leaves ~20 of 30 — its §5.1 budget — while val/online drop to ~40).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import manager as mgr

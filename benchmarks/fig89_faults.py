@@ -8,7 +8,6 @@ fault-free trajectory (paper: final gains on par with Figure 4).
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from repro.core import faults as faults_mod

@@ -1,0 +1,292 @@
+"""Declarative CI benchmark gates: one table, one evaluator.
+
+Every speedup floor, bitwise flag and SLO ceiling that used to live as a
+copy-pasted inline ``python - <<'EOF'`` block in ``.github/workflows/
+ci.yml`` is a ROW in :data:`GATES` — adding a gate is a one-line table
+edit, and every job invokes the same evaluator::
+
+    python -m benchmarks.gates BENCH_crossval.json [more.json ...]
+
+The file's ``benchmark`` field selects its gate list. Gate rows are
+plain dicts; the supported keys (combine freely on one row):
+
+``row``
+    Row name to check, or ``"*"`` for every row in the file. A row spec
+    with ONLY ``row`` asserts existence.
+``flag`` / ``flags``
+    Field name(s) that must be truthy on the selected row(s).
+``metric`` + ``floor`` / ``ceiling`` / ``equals``
+    Numeric bound(s) on one field of the selected row(s).
+``metric`` + ``at_least_row`` [+ ``at_least_metric``]
+    Cross-row comparison: the row's metric must be >= another row's
+    (same metric unless ``at_least_metric`` names a different one).
+``rows_exactly`` / ``rows_at_least``
+    Row-count invariants for the whole file.
+``reason``
+    Free-text shown on failure (the old inline blocks' messages).
+
+Exit status is nonzero on ANY failed gate; every check prints one line
+so CI logs keep the old blocks' readability.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+GATES: dict[str, list[dict]] = {
+    "crossval": [
+        dict(
+            row="crossval_sweep",
+            flag="bitwise_identical",
+            reason="engine diverged from baseline",
+        ),
+        dict(
+            row="crossval_sweep",
+            metric="speedup",
+            floor=2.0,
+            reason="sweep speedup regressed",
+        ),
+        dict(
+            row="crossval_analyze_fused",
+            flag="bitwise_identical",
+            reason="fused 3-set analysis diverged",
+        ),
+    ],
+    "fleet": [
+        dict(
+            row="fleet_drain",
+            flag="bitwise_identical",
+            reason="fleet diverged from serial sessions",
+        ),
+        dict(
+            row="fleet_drain",
+            metric="speedup",
+            floor=2.0,
+            reason="fleet drain speedup regressed (K=8)",
+        ),
+    ],
+    "ingress": [
+        dict(
+            row="ingress_routed",
+            flag="bitwise_identical",
+            reason="routed ingress diverged from per-point offers",
+        ),
+        dict(
+            row="ingress_routed",
+            metric="speedup",
+            floor=4.0,
+            reason="ingress speedup regressed (K=8)",
+        ),
+    ],
+    "scale": [
+        dict(
+            row="*",
+            flag="bitwise_identical",
+            reason="ref<->pallas parity or path equivalence broke",
+        ),
+        dict(
+            row="scale_batch_infer_f784",
+            metric="speedup",
+            at_least_row="scale_batch_infer_f16",
+            reason="batch-infer scale path narrowed from f=16 to f=784",
+        ),
+        dict(
+            row="scale_sweep_f784",
+            metric="speedup",
+            at_least_row="scale_sweep_f16",
+            reason="sweep scale path narrowed from f=16 to f=784",
+        ),
+        dict(
+            row="scale_packed_infer_f784",
+            metric="speedup_pallas",
+            floor=2.0,
+            reason="packed datapath regressed vs unpacked at f=784",
+        ),
+    ],
+    "residency": [
+        dict(
+            row="*",
+            flag="bitwise_identical",
+            reason="residency fleet diverged from always-resident twin",
+        ),
+        dict(
+            row="residency_k1024",
+            metric="devices",
+            equals=4,
+            reason="mesh forcing failed",
+        ),
+        dict(
+            row="residency_k1024",
+            metric="trained_per_s",
+            floor=10.0,
+            reason="K=1024 adapt throughput collapsed",
+        ),
+        dict(
+            row="residency_k4096",
+            reason="K=4096 point missing",
+        ),
+        dict(
+            row="residency_k4096",
+            metric="speedup_vs_percohort",
+            floor=1.5,
+            reason="batched moves lost their win vs per-cohort at K=4096",
+        ),
+    ],
+    "tunable": [
+        dict(
+            rows_exactly=24,
+            reason="budget sweep row count changed",
+        ),
+        dict(
+            row="*",
+            flag="bitwise_at_full_budget",
+            reason="full-budget pruned serve drifted from plain path",
+        ),
+        dict(
+            row="tunable_mnist-f784_pallas_b0p25",
+            metric="speedup_vs_full",
+            floor=2.0,
+            reason="pallas f=784 budget=25% speedup under floor",
+        ),
+        dict(
+            row="tunable_mnist-f784_pallas_b0p25",
+            metric="accuracy_drop",
+            ceiling=0.02,
+            reason="pallas f=784 budget=25% accuracy drop over ceiling",
+        ),
+    ],
+    "traffic": [
+        dict(
+            rows_at_least=3,
+            reason="scenario schedule went missing",
+        ),
+        dict(
+            row="*",
+            flags=("consistent_with_replay", "conserved"),
+            reason="threaded run diverged from replay or lost offers",
+        ),
+        dict(
+            row="*",
+            metric="serve_p99_s",
+            ceiling=1.0,
+            reason="p99 serve latency over the 1000ms ceiling",
+        ),
+        dict(
+            row="traffic_steady",
+            metric="offers_per_s",
+            floor=20.0,
+            reason="steady sustained offer rate collapsed",
+        ),
+    ],
+}
+
+
+class GateFailure(AssertionError):
+    pass
+
+
+def _select(rows: dict[str, dict], spec: dict) -> list[tuple[str, dict]]:
+    name = spec["row"]
+    if name == "*":
+        return sorted(rows.items())
+    if name not in rows:
+        why = spec.get("reason", "required row")
+        raise GateFailure(f"row '{name}' missing: {why}")
+    return [(name, rows[name])]
+
+
+def _check_counts(rows: dict[str, dict], spec: dict) -> list[str]:
+    reason = spec.get("reason", "")
+    if "rows_exactly" in spec:
+        want = spec["rows_exactly"]
+        if len(rows) != want:
+            raise GateFailure(f"expected {want} rows, got {len(rows)}: {reason}")
+        return [f"row count == {want}"]
+    want = spec["rows_at_least"]
+    if len(rows) < want:
+        raise GateFailure(f"expected >= {want} rows, got {len(rows)}: {reason}")
+    return [f"row count {len(rows)} >= {want}"]
+
+
+def _check_metric(rows, name: str, row: dict, spec: dict) -> list[str]:
+    reason = spec.get("reason", "")
+    metric = spec["metric"]
+    if metric not in row:
+        raise GateFailure(f"{name}.{metric} missing: {reason}")
+    v = row[metric]
+    if "floor" in spec and not v >= spec["floor"]:
+        bound = spec["floor"]
+        raise GateFailure(f"{name}.{metric} = {v:.3g} < {bound:.3g} floor: {reason}")
+    if "ceiling" in spec and not v <= spec["ceiling"]:
+        bound = spec["ceiling"]
+        raise GateFailure(f"{name}.{metric} = {v:.3g} > {bound:.3g} ceiling: {reason}")
+    if "equals" in spec and v != spec["equals"]:
+        want = spec["equals"]
+        raise GateFailure(f"{name}.{metric} = {v!r} != {want!r}: {reason}")
+    if "at_least_row" in spec:
+        other = spec["at_least_row"]
+        om = spec.get("at_least_metric", metric)
+        if other not in rows:
+            raise GateFailure(f"comparison row '{other}' missing: {reason}")
+        ov = rows[other][om]
+        if not v >= ov:
+            msg = f"{name}.{metric} = {v:.3g} < {other}.{om} = {ov:.3g}"
+            raise GateFailure(f"{msg}: {reason}")
+        return [f"{name}.{metric} {v:.3g} >= {other}.{om} {ov:.3g}"]
+    shown = f"{v:.4g}" if isinstance(v, float) else str(v)
+    return [f"{name}.{metric} = {shown}"]
+
+
+def _check_one(rows: dict[str, dict], spec: dict) -> list[str]:
+    """Evaluate one gate row; returns human lines, raises GateFailure."""
+    if "rows_exactly" in spec or "rows_at_least" in spec:
+        return _check_counts(rows, spec)
+    reason = spec.get("reason", "")
+    out = []
+    flags = tuple(spec.get("flags", ()))
+    if "flag" in spec:
+        flags = (spec["flag"],) + flags
+    for name, row in _select(rows, spec):
+        for flag in flags:
+            if not row.get(flag):
+                raise GateFailure(f"{name}.{flag} is not set: {reason}")
+            out.append(f"{name}.{flag} ok")
+        if "metric" in spec:
+            out.extend(_check_metric(rows, name, row, spec))
+        if not flags and "metric" not in spec:
+            out.append(f"{name} present")
+    return out
+
+
+def check_file(path: str) -> int:
+    """Gate one BENCH_*.json; returns the number of failures (printed)."""
+    with open(path) as f:
+        payload = json.load(f)
+    bench = payload.get("benchmark")
+    if bench not in GATES:
+        print(f"FAIL {path}: no gates for benchmark {bench!r} — add it to GATES")
+        return 1
+    rows = {r["name"]: r for r in payload["results"]}
+    failures = 0
+    for spec in GATES[bench]:
+        try:
+            for line in _check_one(rows, spec):
+                print(f"  ok: {line}")
+        except GateFailure as e:
+            failures += 1
+            print(f"  FAIL: {e}")
+    status = "FAIL" if failures else "ok"
+    print(f"{status} {path}: {len(GATES[bench])} gates, {failures} failed")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.gates BENCH_x.json [...]")
+        return 2
+    return 1 if sum(check_file(p) for p in argv) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

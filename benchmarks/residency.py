@@ -11,14 +11,19 @@ residency drain's sweep criterion — see tests/test_residency.py), so the
 numbers measure a correct fleet, not a drifting one.
 
 Measured per K: adapt throughput (drained points/s through the
-submit/tick loop, activation thrash included), offered rows/s, and the
+submit/tick loop, activation thrash included), offered rows/s, the
 explicit activate/evict cohort latency (host snapshot <-> device slot
-moves, per replica).
+moves, per replica), and — the §17 tentpole number — the batched
+datapath's speedup over PR 8's synchronous per-cohort baseline
+(``batched_moves=False``, same traffic, same seeds):
+``speedup_vs_percohort``. An extra ``residency_auto`` row drives
+``resident="auto"`` through a dense->sparse traffic shift and records
+the re-partition trajectory.
 
 Machine-readable results go to ``BENCH_residency.json`` (override with
-env ``REPRO_BENCH_RESIDENCY_JSON``). CI gates
-``results[residency_k1024].trained_per_s`` on the 4-device mesh and
-every row's ``bitwise_identical``.
+env ``REPRO_BENCH_RESIDENCY_JSON``). CI gates (benchmarks/gates.py)
+every row's ``bitwise_identical``, ``residency_k1024.trained_per_s`` on
+the 4-device mesh, and ``residency_k4096.speedup_vs_percohort >= 1.5``.
 """
 from __future__ import annotations
 
@@ -48,10 +53,11 @@ def _mesh():
     return jax.make_mesh((n,), ("replicas",)) if n > 1 else None
 
 
-def _make(K, resident, mesh, seed=0):
+def _make(K, resident, mesh, seed=0, batched=True):
     return TMService(CFG, init_state(CFG), ServiceConfig(
         replicas=K, buffer_capacity=16, chunk=8, ingress_block=8,
         s=3.0, T=15, seed=seed, resident=resident, mesh=mesh,
+        batched_moves=batched,
         policy=AdaptPolicy(analyze_every=10 ** 9),  # drain-only loop
     ))
 
@@ -131,6 +137,18 @@ def residency_bench(K: int, resident: int, rounds: int, active: int,
     _drive(svc, rounds, active, rng_seed=1)
     wall = time.perf_counter() - t0
     trained = int(svc.steps.sum()) - trained0
+
+    # per-cohort baseline (PR 8's synchronous gather/scatter path), same
+    # traffic and seeds — the §17 speedup denominator
+    base = _make(K, resident, mesh, batched=False)
+    _drive(base, 2, active)
+    base0 = int(base.steps.sum())
+    t0 = time.perf_counter()
+    _drive(base, rounds, active, rng_seed=1)
+    wall_base = time.perf_counter() - t0
+    trained_base = int(base.steps.sum()) - base0
+    assert trained_base == trained, "baseline consumed different traffic"
+
     evict_s, act_s = _move_latency(svc)
     return {
         "n_replicas": K,
@@ -143,11 +161,41 @@ def residency_bench(K: int, resident: int, rounds: int, active: int,
         "trained_points": trained,
         "trained_per_s": trained / wall,
         "offers_per_s": rounds * active / wall,
+        "percohort_wall_s": wall_base,
+        "percohort_trained_per_s": trained_base / wall_base,
+        "speedup_vs_percohort": wall_base / wall,
         "activations": int(svc._res.activations),
         "evictions": int(svc._res.evictions),
         "evict_latency_s_per_replica": evict_s,
         "activate_latency_s_per_replica": act_s,
         "bitwise_identical": bitwise,
+    }
+
+
+def auto_residency_bench(K: int, rounds: int, *, mesh=None) -> dict:
+    """resident='auto' observability row: a dense->sparse traffic shift
+    and the re-partition trajectory it provokes, with the twin bitwise
+    assertion held across every re-partition."""
+    svc = _make(K, "auto", mesh)
+    twin = _make(K, None, None)
+    r0 = svc.n_resident
+    half = rounds // 2
+    _drive(svc, half, K, twin=twin)                # dense: grow
+    grown = svc.n_resident
+    _drive(svc, rounds - half, 1, twin=twin,       # sparse: shrink
+           rng_seed=1)
+    _assert_twin_bitwise(svc, twin)
+    return {
+        "n_replicas": K,
+        "rounds": rounds,
+        "devices": len(jax.devices()),
+        "sharded": mesh is not None,
+        "resident_initial": r0,
+        "resident_after_dense": grown,
+        "resident_final": svc.n_resident,
+        "repartitions": int(svc.repartitions),
+        "ewma_active": float(svc._res.ewma_active),
+        "bitwise_identical": True,
     }
 
 
@@ -168,11 +216,21 @@ def main():
             f"{name},{row['wall_s'] * 1e6:.1f},"
             f"resident={resident};devices={row['devices']};"
             f"trained_per_s={row['trained_per_s']:.0f};"
+            f"speedup_vs_percohort={row['speedup_vs_percohort']:.2f};"
             f"act_us={row['activate_latency_s_per_replica'] * 1e6:.0f};"
             f"evict_us={row['evict_latency_s_per_replica'] * 1e6:.0f};"
             f"bitwise_identical=1"
         )
         RESULTS.append({"name": name, **row})
+
+    row = auto_residency_bench(64, 24, mesh=mesh)
+    print(
+        f"residency_auto,0.0,"
+        f"resident={row['resident_initial']}->"
+        f"{row['resident_after_dense']}->{row['resident_final']};"
+        f"repartitions={row['repartitions']};bitwise_identical=1"
+    )
+    RESULTS.append({"name": "residency_auto", **row})
 
     out_path = os.environ.get("REPRO_BENCH_RESIDENCY_JSON",
                               "BENCH_residency.json")

@@ -1,0 +1,107 @@
+"""Aggregate BENCH_*.json payloads into one markdown summary.
+
+CI's ``bench-summary`` job downloads every benchmark artifact, runs::
+
+    python -m benchmarks.summary BENCH_*.json
+
+and publishes the result twice: appended to ``$GITHUB_STEP_SUMMARY``
+(the run's summary page shows every headline number without clicking
+into job logs) and written to ``BENCH_summary.md`` (uploaded as the
+single roll-up artifact). Locally the same invocation just prints the
+markdown.
+
+Each payload renders as one table — rows are the benchmark's result
+rows, columns are whichever HEADLINE metrics those rows carry (bitwise/
+consistency flags, speedups, throughput rates, latency percentiles,
+accuracy). Fields outside the headline list stay in the per-benchmark
+JSON artifacts; this file is the at-a-glance view, not the archive.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# Column order for every metric worth surfacing on the summary page.
+# A column appears in a table only if at least one row carries the key.
+HEADLINE = (
+    "bitwise_identical",
+    "bitwise_at_full_budget",
+    "consistent_with_replay",
+    "conserved",
+    "speedup",
+    "speedup_pallas",
+    "speedup_vs_full",
+    "speedup_vs_percohort",
+    "trained_per_s",
+    "offers_per_s",
+    "points_per_s",
+    "serve_p50_s",
+    "serve_p99_s",
+    "accuracy",
+    "accuracy_drop",
+    "devices",
+    "resident",
+    "resident_initial",
+    "resident_final",
+    "repartitions",
+)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return "yes" if v else "**NO**"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 100:
+            return f"{v:,.0f}"
+        return f"{v:.3g}" if abs(v) >= 1e-3 else f"{v:.2e}"
+    if v is None:
+        return ""
+    return str(v)
+
+
+def render_payload(payload: dict) -> list[str]:
+    """One markdown section (header + table) for one BENCH payload."""
+    bench = payload.get("benchmark", "?")
+    rows = payload.get("results", [])
+    backend = payload.get("backend", "")
+    jaxb = payload.get("jax_backend", "")
+    lines = [f"### {bench} (`backend={backend}`, `jax={jaxb}`)", ""]
+    cols = [k for k in HEADLINE if any(k in r for r in rows)]
+    lines.append("| row | " + " | ".join(cols) + " |")
+    lines.append("|---" * (len(cols) + 1) + "|")
+    for r in rows:
+        cells = " | ".join(_fmt(r.get(k)) for k in cols)
+        lines.append("| " + str(r.get("name", "?")) + " | " + cells + " |")
+    lines.append("")
+    return lines
+
+
+def render(paths: list[str]) -> str:
+    lines = ["## Benchmark summary", ""]
+    for path in sorted(paths):
+        with open(path) as f:
+            lines.extend(render_payload(json.load(f)))
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.summary BENCH_x.json [...]")
+        return 2
+    md = render(argv)
+    print(md)
+    with open("BENCH_summary.md", "w") as f:
+        f.write(md)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

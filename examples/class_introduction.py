@@ -12,7 +12,6 @@ import os
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import manager as mgr

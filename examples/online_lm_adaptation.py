@@ -7,7 +7,6 @@ on-chip-retrain policy (§5.3.2) as an LM serving runtime.
 
     PYTHONPATH=src python examples/online_lm_adaptation.py
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

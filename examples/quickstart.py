@@ -16,9 +16,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from repro.core import manager as mgr

@@ -8,7 +8,6 @@ checkpoints, NaN/straggler watchdog, resume-on-restart).
 default ~100M config takes a few s/step on one CPU core.
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ config used by the CPU smoke tests.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 from repro.configs.base import ModelConfig, ShapeConfig, SHAPES  # noqa: F401

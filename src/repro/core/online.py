@@ -61,15 +61,46 @@ def replica_gate(valid: jax.Array):
     return apply
 
 
+@jax.jit
+def _take_rows(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def gather_replicas_issue(tree, idx):
+    """ISSUE half of :func:`gather_replicas`: slice the named rows of
+    every replica-leading leaf as DEVICE values and return immediately.
+
+    JAX dispatch is asynchronous and arrays are immutable, so the
+    returned slices stay bit-correct even after the caller functionally
+    replaces the plane (activations, drain chunks) — the residency
+    layer's deferred-spill path issues the gather here and materializes
+    it with :func:`gather_replicas_await` only when the snapshot is
+    actually read, off the inter-cohort critical path (DESIGN.md §17).
+    The whole tree is sliced in ONE jitted dispatch — per-leaf eager
+    gathers on a sharded plane pay ~ms of dispatch each, which at
+    K=4096 dominated the cohort-move path.
+    """
+    return _take_rows(tree, jnp.asarray(np.asarray(idx)))
+
+
+def gather_replicas_await(tree):
+    """AWAIT half: materialize an issued gather to HOST numpy (blocks
+    until the device slices are ready)."""
+    return jax.tree.map(np.asarray, tree)
+
+
 def gather_replicas(tree, idx):
     """Rows ``idx`` of every replica-leading leaf, as HOST numpy.
 
-    The residency layer's evict path: pull the named device-plane slots
-    into one stacked host tree (``[len(idx), ...]`` per leaf) with a
-    single device round-trip per leaf.
+    The residency layer's synchronous evict path: pull the named
+    device-plane slots into one stacked host tree (``[len(idx), ...]``
+    per leaf) with a blocking eager gather per leaf. This is the
+    ``batched_moves=False`` oracle/baseline datapath and deliberately
+    stays per-leaf eager — the jitted one-dispatch slice is the batched
+    path's (:func:`gather_replicas_issue`) half of the §17 win.
     """
     idx = np.asarray(idx)
-    return jax.tree.map(lambda a: np.asarray(a[idx]), tree)
+    return gather_replicas_await(jax.tree.map(lambda a: a[idx], tree))
 
 
 def scatter_replicas(tree, idx, values):
@@ -81,6 +112,25 @@ def scatter_replicas(tree, idx, values):
     idx = jnp.asarray(idx)
     return jax.tree.map(
         lambda a, v: a.at[idx].set(jnp.asarray(v, a.dtype)), tree, values
+    )
+
+
+@jax.jit
+def activate_replicas(plane, act_plane, mask):
+    """Per-slot mask-select activation: slot ``r`` takes ``act_plane``
+    where ``mask[r]``, else keeps ``plane`` — ONE fused elementwise
+    dispatch for a whole activation cohort (the batched-residency twin
+    of :func:`scatter_replicas`, DESIGN.md §17).
+
+    ``act_plane`` is a SLOT-INDEXED host tree (``[R, ...]`` per leaf,
+    zeros in inactive rows), so there is no index scatter at all — no
+    duplicate-index ordering hazard, and the select fuses with whatever
+    jitted work follows in the same dispatch. Dtypes are pinned to the
+    destination leaf, like the scatter path.
+    """
+    gate = replica_gate(mask)
+    return jax.tree.map(
+        lambda new, old: gate(new.astype(old.dtype), old), act_plane, plane
     )
 
 

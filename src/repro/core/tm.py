@@ -25,7 +25,6 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import dispatch, packing
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
 from typing import NamedTuple
 
 import numpy as np

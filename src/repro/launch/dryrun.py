@@ -21,7 +21,6 @@ Usage:
   python -m repro.launch.dryrun --all [--mesh both] [--subprocess]
 """
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys
@@ -151,7 +150,6 @@ def build_tm_cell(mesh):
     cross-validation/HP-search grid as ONE program, replicas sharded over
     every mesh axis (goal (ii) at pod scale). 8 x 4 x 128 = 4096 TM replicas
     train 10 epochs on 30-row offline sets and report validation accuracy."""
-    import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as PS
 
     from repro.configs.tm_iris import CONFIG as TM_SYS

@@ -8,17 +8,15 @@ watch, nan-watchdog).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.configs.base import ShapeConfig
 from repro.data import synthetic
 from repro.models import params as P
-from repro.models import stubs, transformer
+from repro.models import transformer
 from repro.train import loop as loop_mod
 from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts_mod

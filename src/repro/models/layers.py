@@ -120,7 +120,6 @@ def _gqa_scores_out(cfg, q, k, v, mask):
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     g = hq // hkv
     B, S = q.shape[0], q.shape[1]
-    T = k.shape[1]
     qg = q.reshape(B, S, hkv, g, q.shape[-1])
     scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
     scores = scores / jnp.sqrt(q.shape[-1]).astype(jnp.float32)

@@ -18,7 +18,6 @@ layers instead of 524288-token ones.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ import dataclasses
 from typing import Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig

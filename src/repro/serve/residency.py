@@ -32,6 +32,14 @@ from typing import Any
 
 import numpy as np
 
+# EWMA smoothing of the observed active-set size: 0.5 tracks a shifted
+# working set within ~3 rounds while one idle round moves the estimate
+# only halfway (the hysteresis band absorbs that).
+EWMA_ALPHA = 0.5
+# Grow/shrink target = ceil(ewma * headroom): room for the active set to
+# jitter above its average without immediately re-cohorting.
+AUTO_HEADROOM = 1.5
+
 
 class ResidencyMap:
     """Replica <-> device-slot assignment + LRU + spilled snapshot store.
@@ -48,9 +56,12 @@ class ResidencyMap:
     """
 
     def __init__(self, n_replicas: int, n_slots: int):
-        if not (1 <= n_slots < n_replicas):
+        # <= (not <): the resident="auto" service may grow the plane to
+        # the full fleet while keeping the residency layer's semantics
+        # (uniform serve/evict surface across re-partitions).
+        if not (1 <= n_slots <= n_replicas):
             raise ValueError(
-                f"residency needs 1 <= resident < replicas, got "
+                f"residency needs 1 <= resident <= replicas, got "
                 f"resident={n_slots} replicas={n_replicas}"
             )
         self.n_replicas = int(n_replicas)
@@ -62,6 +73,9 @@ class ResidencyMap:
         self.store: dict[int, Any] = {}     # rid -> host snapshot tree
         self.activations = 0                # lifetime counters (bench +
         self.evictions = 0                  # observability)
+        # EWMA of the per-round active-set size (replicas with buffered
+        # rows AND budget per drain round) — the autotune signal.
+        self.ewma_active = float("nan")
 
     @property
     def resident_mask(self) -> np.ndarray:
@@ -108,3 +122,43 @@ class ResidencyMap:
         self.replica_of[slots] = -1
         self.evictions += len(slots)
         return rids
+
+    # -- slot-count autotuning (ServiceConfig(resident="auto")) -------------
+
+    def note_active(self, n: int) -> None:
+        """Feed one drain round's active-set size into the EWMA. The
+        first observation seeds the average (no warm-up bias)."""
+        n = float(n)
+        if np.isnan(self.ewma_active):
+            self.ewma_active = n
+        else:
+            self.ewma_active = (EWMA_ALPHA * n
+                                + (1.0 - EWMA_ALPHA) * self.ewma_active)
+
+    def autotune_target(self, *, headroom: float = AUTO_HEADROOM,
+                        granule: int = 1) -> int:
+        """The slot count the plane SHOULD have, given the EWMA — or the
+        current count when inside the hysteresis band.
+
+        Grow when the estimated active set no longer fits the plane
+        (``ceil(ewma) > n_slots``: rounds are being cohorted), to
+        ``ceil(ewma * headroom)``. Shrink when even with headroom the
+        demand uses less than half the plane (``ewma * headroom <
+        n_slots / 2``), to the same target. The half-plane gap between
+        the grow and shrink conditions is the hysteresis band — a fleet
+        oscillating around a working-set size never thrashes
+        re-partitions. Targets clamp to [1, n_replicas] and round up to
+        ``granule`` (the mesh device count, so sharding stays even),
+        capped at the fleet size.
+        """
+        if np.isnan(self.ewma_active):
+            return self.n_slots
+        want = self.ewma_active * headroom
+        grow = int(np.ceil(self.ewma_active)) > self.n_slots
+        shrink = want < self.n_slots / 2
+        if not (grow or shrink):
+            return self.n_slots
+        target = max(1, int(np.ceil(want)))
+        granule = max(1, int(granule))
+        target = -(-target // granule) * granule
+        return min(self.n_replicas, target)

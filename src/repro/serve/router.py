@@ -219,6 +219,32 @@ class BatchRouter:
 
     # -- consumer side ------------------------------------------------------
 
+    def take_lanes(
+        self, rids
+    ) -> Optional[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Take ONLY the named replicas' staged rows out of the active
+        block (stable copies; their lane counts zero so producers restage
+        from the front). Returns (xs [n, B, f], ys [n, B], counts [n]) or
+        None when none of the named lanes holds rows.
+
+        The scoped-flush path for :meth:`TMService.evict`: landing a few
+        replicas' rows before a spill must not force a whole-fleet flush.
+        Other lanes' staged rows stay exactly where they are. Like
+        ``take_block`` this assumes ONE consumer (the service's device
+        lock); the inactive block never holds rows outside an in-flight
+        flush, so the active block is the only staged storage to scan.
+        """
+        with self.lock:
+            blk = self._blocks[self._active]
+            rids = np.asarray(rids, dtype=np.int64).reshape(-1)
+            counts = blk.count[rids].copy()
+            if not counts.any():
+                return None
+            xs = blk.x[rids].copy()
+            ys = blk.y[rids].copy()
+            blk.count[rids] = 0
+            return xs, ys, counts
+
     def take_block(self) -> Optional[tuple[np.ndarray, np.ndarray, np.ndarray]]:
         """Swap the staging blocks; returns the filled (xs [K, B, f],
         ys [K, B], counts [K]) block, or None when nothing is staged.

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from functools import partial
 from typing import Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
@@ -64,6 +65,25 @@ def _advance_keys(keys, active):
     """
     k2 = jax.vmap(jax.random.split)(keys)               # [K, 2, key]
     return jnp.where(active[:, None], k2[:, 0], keys), k2[:, 1]
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _activate_enqueue_rows(ss, keys, block: int, act_mask, act_ss,
+                           act_keys, xs, ys, counts):
+    """A residency cohort's activation select FUSED with its superblock
+    enqueue — ONE device round-trip where PR 8's per-cohort path paid a
+    blocking gather, an index scatter and an enqueue (DESIGN.md §17).
+
+    ``act_ss``/``act_keys`` are the slot-indexed activation payload from
+    ``TMService._prepare_slots`` (host zeros outside ``act_mask``); the
+    mask-select lands the snapshots, then the staged rows push into the
+    freshly activated ring buffers inside the same jitted program.
+    """
+    ss, keys = online_mod.activate_replicas(
+        (ss, keys), (act_ss, act_keys), act_mask
+    )
+    ss, accepted = router_mod._enqueue_rows(ss, block, xs, ys, counts)
+    return ss, keys, accepted
 
 
 def _select_replicas(mask, new: TMState, old: TMState) -> TMState:
@@ -188,8 +208,22 @@ class ServiceConfig:
     when traffic, inference or analysis touches them. This is the
     thousand-replica knob — K=4096 personalization fleets on a 4-device
     mesh with bounded device memory. None (default) keeps every replica
-    resident. Requires scalar ``s``/``T`` (a slot's runtime ports must
-    not change meaning with the replica occupying it).
+    resident. The string ``"auto"`` (DESIGN.md §17) self-sizes the
+    plane: the residency map keeps an EWMA of the per-round active-set
+    size and ``tick`` re-partitions (via the checkpoint-migration
+    machinery) when the estimate crosses the grow/shrink hysteresis
+    bands — trajectories are unchanged across re-partitions
+    (partitioning is not logical state). Requires scalar ``s``/``T``
+    (a slot's runtime ports must not change meaning with the replica
+    occupying it).
+
+    ``batched_moves`` (default True) selects the batched residency
+    datapath (DESIGN.md §17): activation snapshots ride the flush/drain
+    dispatch as a fused mask-select and eviction gathers are issued
+    asynchronously, settled off the critical path. False keeps PR 8's
+    synchronous per-cohort gather/scatter sequence — bitwise identical
+    (pinned by tests/test_residency.py) and the baseline
+    ``benchmarks/residency.py`` measures the batched path against.
 
     ``tunable`` (a :class:`~repro.serve.tunable.TunableConfig`) arms the
     runtime-tunable serving path (DESIGN.md §16): after
@@ -208,7 +242,9 @@ class ServiceConfig:
     ingress_block: int = 32           # staged rows per replica per flush
     packed: bool = False              # bit-packed datapath (DESIGN.md §13)
     history_limit: Optional[int] = None   # analysis entries kept (None = all)
-    resident: Optional[int] = None    # device slots (None = all K resident)
+    # device slots: None = all K resident, int = fixed, "auto" = self-sizing
+    resident: Union[int, None, str] = None
+    batched_moves: bool = True        # batched residency datapath (§17)
     s: Union[float, Sequence[float], None] = None
     T: Union[int, Sequence[int], None] = None
     policy: AdaptPolicy = dataclasses.field(default_factory=AdaptPolicy)
@@ -285,11 +321,28 @@ class TMService:
                 f"state carries {state.ta_state.shape[0]} replicas, "
                 f"expected {K}"
             )
-        residency = sc.resident is not None and sc.resident < K
-        if sc.resident is not None and sc.resident < 1:
-            raise ValueError("resident must be >= 1 (or None)")
-        # P: the device-plane length — R slots under residency, else K.
-        P = int(sc.resident) if residency else K
+        auto = sc.resident == "auto"
+        if isinstance(sc.resident, str) and not auto:
+            raise ValueError(
+                f"resident must be an int, None or 'auto', "
+                f"got {sc.resident!r}"
+            )
+        if not auto and sc.resident is not None and sc.resident < 1:
+            raise ValueError("resident must be >= 1 (or None, or 'auto')")
+        # Auto-residency (§17): re-partition targets round up to the mesh
+        # device count so the plane always shards evenly.
+        granule = 1 if sc.mesh is None else int(sc.mesh.devices.size)
+        if auto:
+            # Start at a quarter of the fleet (granule-rounded): small
+            # enough that a sparse workload shrinks within one band, big
+            # enough that dense traffic grows without thrashing first.
+            P = max(1, -(-K // 4))
+            P = min(K, -(-P // granule) * granule)
+            residency = True
+        else:
+            residency = sc.resident is not None and sc.resident < K
+            # P: the device-plane length — R slots under residency, else K.
+            P = int(sc.resident) if residency else K
 
         self.cfg = cfg
         self.sc = sc
@@ -354,6 +407,19 @@ class TMService:
         # store, so sharing is safe).
         self._res: Optional[res_mod.ResidencyMap] = None
         self._best_host: Optional[np.ndarray] = None  # [K, C, J, L] banks
+        self._auto = auto
+        self._granule = granule
+        # Batched residency moves (§17): fused activate+enqueue dispatch,
+        # deferred spill settlement. False = PR 8's synchronous per-cohort
+        # path, kept as the bitwise oracle + bench baseline.
+        self._batched = residency and sc.batched_moves
+        self.repartitions = 0              # auto re-partition count
+        # Deferred spills: (device value tree, rids) pairs issued but not
+        # yet copied to host. Settled lazily (before any full-plane read,
+        # store access, or re-activation of a pending rid) — the device
+        # slices stay valid across plane replacement (JAX immutability).
+        self._pending_spills: list = []
+        self._pending_rids: set = set()
         if residency:
             self._res = res_mod.ResidencyMap(K, P)
             self._res.assign(np.arange(P), np.arange(P))
@@ -443,6 +509,7 @@ class TMService:
     def _assemble_plane(self) -> tuple[SessionState, np.ndarray]:
         """The full-K logical (SessionState, keys) as HOST numpy — device
         rows gathered into replica order, spilled snapshots filled in."""
+        self._settle_spills()
         host = jax.tree.map(np.asarray, (self._ss, self._keys))
         if self._res is None:
             return host
@@ -530,32 +597,96 @@ class TMService:
         return acc
 
     def _flush_block_residency(self, xs, ys, counts) -> np.ndarray:
-        """One taken [K, B] block under residency: lanes with traffic are
-        activated (LRU-evicting as needed) in cohorts of <= resident, and
-        each cohort lands via one [R]-plane enqueue dispatch with the lane
-        rows scattered to their replicas' slots."""
+        """One taken [K, B] block under residency: the full hot-lane set
+        is built host-side ONCE per round, then lands cohort by cohort
+        through :meth:`_enqueue_lanes` — the batched path (§17) fuses
+        each cohort's activation select with its superblock enqueue into
+        one dispatch; ``batched_moves=False`` keeps PR 8's synchronous
+        per-cohort gather/scatter/enqueue sequence as the oracle."""
+        lanes = np.nonzero(np.asarray(counts) > 0)[0]
+        return self._enqueue_lanes(lanes, xs[lanes], ys[lanes],
+                                   counts[lanes])
+
+    def _enqueue_lanes(self, lanes, xs_l, ys_l, cnt_l) -> np.ndarray:
+        """Land the given lanes' staged rows (lane-indexed [n, B, ...])
+        into their replicas' device rings, cohorting by the slot count.
+        Returns [K] rows landed (mirror + drop accounting per cohort)."""
         K, R = self.n_replicas, self.n_resident
         landed = np.zeros(K, dtype=np.int64)
-        lanes = np.nonzero(np.asarray(counts) > 0)[0]
         for i in range(0, len(lanes), R):
-            cohort = lanes[i:i + R]
-            slots = self._ensure_resident(cohort)
-            xs_p = np.zeros((R,) + xs.shape[1:], dtype=xs.dtype)
-            ys_p = np.zeros((R,) + ys.shape[1:], dtype=ys.dtype)
-            cnt_p = np.zeros((R,), dtype=counts.dtype)
-            xs_p[slots] = xs[cohort]
-            ys_p[slots] = ys[cohort]
-            cnt_p[slots] = counts[cohort]
-            self._ss, accepted = router_mod._enqueue_rows(
-                self._ss, self.router.block, xs_p, ys_p, cnt_p
-            )
-            acc = np.asarray(accepted, dtype=np.int64)[slots]
-            rej = np.asarray(counts[cohort], dtype=np.int64) - acc
+            sl = slice(i, i + R)
+            cohort = lanes[sl]
+            enqueue = (self._enqueue_cohort_batched if self._batched
+                       else self._enqueue_cohort_sync)
+            acc = enqueue(cohort, xs_l[sl], ys_l[sl], cnt_l[sl])
+            rej = np.asarray(cnt_l[sl], dtype=np.int64) - acc
             with self.router.lock:
                 self._dev_size[cohort] -= rej
                 self.router.dropped[cohort] += rej
             landed[cohort] += acc
         return landed
+
+    def _enqueue_cohort_sync(self, cohort, xs_c, ys_c,
+                             cnt_c) -> np.ndarray:
+        """PR 8's per-cohort path: synchronous activation (blocking
+        gather + index scatter), then a separate enqueue dispatch. The
+        bitwise oracle the batched path is pinned against
+        (tests/test_residency.py) and the baseline it is benched
+        against (benchmarks/residency.py)."""
+        R = self.n_resident
+        slots = self._ensure_resident(cohort)
+        xs_p = np.zeros((R,) + xs_c.shape[1:], dtype=xs_c.dtype)
+        ys_p = np.zeros((R,) + ys_c.shape[1:], dtype=ys_c.dtype)
+        cnt_p = np.zeros((R,), dtype=cnt_c.dtype)
+        xs_p[slots] = xs_c
+        ys_p[slots] = ys_c
+        cnt_p[slots] = cnt_c
+        self._ss, accepted = router_mod._enqueue_rows(
+            self._ss, self.router.block, xs_p, ys_p, cnt_p
+        )
+        return np.asarray(accepted, dtype=np.int64)[slots]
+
+    def _enqueue_cohort_batched(self, cohort, xs_c, ys_c,
+                                cnt_c) -> np.ndarray:
+        """§17 batched cohort: prepare the slots (victim gathers ISSUED,
+        not awaited; activation snapshots stacked into slot-indexed host
+        planes), scatter the lane rows to the [R, B] superblock, then
+        ONE fused activate+enqueue dispatch. Pending spill copies settle
+        only after the dispatch is in flight, so the device->host
+        drain of cohort i's victims overlaps cohort i+1's device work."""
+        R = self.n_resident
+        slots, act = self._prepare_slots(cohort)
+        xs_p = np.zeros((R,) + xs_c.shape[1:], dtype=xs_c.dtype)
+        ys_p = np.zeros((R,) + ys_c.shape[1:], dtype=ys_c.dtype)
+        cnt_p = np.zeros((R,), dtype=cnt_c.dtype)
+        xs_p[slots] = xs_c
+        ys_p[slots] = ys_c
+        cnt_p[slots] = cnt_c
+        if act is None:
+            self._ss, accepted = router_mod._enqueue_rows(
+                self._ss, self.router.block, xs_p, ys_p, cnt_p
+            )
+        else:
+            act_mask, (act_ss, act_keys) = act
+            self._ss, self._keys, accepted = _activate_enqueue_rows(
+                self._ss, self._keys, self.router.block,
+                act_mask, act_ss, act_keys, xs_p, ys_p, cnt_p,
+            )
+            self._reshard_plane()
+        self._settle_spills()
+        return np.asarray(accepted, dtype=np.int64)[slots]
+
+    def _reshard_plane(self) -> None:
+        """Re-pin the device plane's sharding after a dispatch whose
+        host-side activation operands carried no placement (mesh only;
+        a no-op move when the compiler already kept the layout)."""
+        if self.mesh is None:
+            return
+        plane = (self._ss, self._keys)
+        sh = shard_mod.replica_shardings(
+            plane, self.mesh, n_replicas=self.n_resident
+        )
+        self._ss, self._keys = jax.tree.map(jax.device_put, plane, sh)
 
     # -- residency (DESIGN.md §15) ------------------------------------------
 
@@ -571,6 +702,20 @@ class TMService:
         """Device slots for the named replicas, activating evicted ones
         (spilling LRU residents to make room). Callers hold the device
         lock; a cohort is at most ``n_resident`` distinct replicas."""
+        if not self._batched:
+            return self._ensure_resident_sync(rids)
+        slots, act = self._prepare_slots(rids)
+        if act is not None:
+            act_mask, act_plane = act
+            self._ss, self._keys = online_mod.activate_replicas(
+                (self._ss, self._keys), act_plane, act_mask
+            )
+            self._reshard_plane()
+        return slots
+
+    def _ensure_resident_sync(self, rids) -> np.ndarray:
+        """PR 8's synchronous residency body (``batched_moves=False``):
+        blocking gather on spill, index scatter on activate."""
         res = self._res
         rids = np.asarray(rids, dtype=np.int64).reshape(-1)
         if len(rids) > self.n_resident:
@@ -595,6 +740,90 @@ class TMService:
         slots = res.slot_of[rids]
         res.touch(slots)
         return slots
+
+    def _prepare_slots(self, rids):
+        """Slots for the named cohort, with the activation BUILT but not
+        landed: victims' device gathers are issued (not awaited) and the
+        evicted members' snapshots stack into slot-indexed [R, ...] host
+        planes plus an activation mask — ready to ride a fused dispatch
+        (§17). Returns (slots [n], None | (act_mask [R],
+        (act_ss_plane, act_keys_plane)))."""
+        res = self._res
+        R = self.n_resident
+        rids = np.asarray(rids, dtype=np.int64).reshape(-1)
+        if len(rids) > R:
+            raise ValueError(
+                f"cohort of {len(rids)} replicas exceeds the "
+                f"{R} device slots"
+            )
+        if len(np.unique(rids)) != len(rids):
+            raise ValueError("duplicate replicas in a residency cohort")
+        need = rids[res.slot_of[rids] < 0]
+        if len(need) == 0:
+            slots = res.slot_of[rids]
+            res.touch(slots)
+            return slots, None
+        free = res.free_slots()
+        take = list(free[:len(need)])
+        short = len(need) - len(take)
+        if short > 0:
+            pinned = res.slot_of[rids]
+            victims = res.lru_victims(short, pinned[pinned >= 0])
+            self._spill_issue(victims)
+            take += list(victims)
+        take = np.asarray(take[:len(need)], dtype=np.int64)
+        # Re-activating a replica whose spill is still in flight needs
+        # the snapshot NOW — its bits exist only in the deferred device
+        # slices until a settle writes the store.
+        if self._pending_rids.intersection(int(r) for r in need):
+            self._settle_spills()
+        snaps = [res.store.pop(int(r)) for r in need]
+        vals = jax.tree.map(lambda *xs: np.stack(xs), *snaps)
+
+        def to_plane(leaf):
+            leaf = np.asarray(leaf)
+            out = np.zeros((R,) + leaf.shape[1:], dtype=leaf.dtype)
+            out[take] = leaf
+            return out
+
+        act_plane = jax.tree.map(to_plane, vals)
+        act_mask = np.zeros(R, dtype=bool)
+        act_mask[take] = True
+        res.assign(need, take)
+        slots = res.slot_of[rids]
+        res.touch(slots)
+        return slots, (act_mask, act_plane)
+
+    def _spill_issue(self, slots) -> None:
+        """ISSUE the device->host gather for the replicas in the given
+        slots without awaiting it: the sliced device values (immutable,
+        so bit-correct across later plane replacements) park on the
+        pending list and materialize at the next settle point — off the
+        inter-cohort critical path (§17)."""
+        slots = np.asarray(slots, dtype=np.int64)
+        if len(slots) == 0:
+            return
+        vals = online_mod.gather_replicas_issue(
+            (self._ss, self._keys), slots
+        )
+        rids = self._res.release(slots)
+        self._pending_spills.append((vals, rids))
+        self._pending_rids.update(int(r) for r in rids)
+
+    def _settle_spills(self) -> None:
+        """Materialize every pending spill into the host store. Cheap
+        no-op when nothing is pending; every full-plane read
+        (_assemble_plane, steps, bank access) settles first."""
+        if not self._pending_spills:
+            return
+        pending, self._pending_spills = self._pending_spills, []
+        self._pending_rids.clear()
+        for vals, rids in pending:
+            host = online_mod.gather_replicas_await(vals)
+            for j, rid in enumerate(rids):
+                self._res.store[int(rid)] = jax.tree.map(
+                    lambda a, _j=j: a[_j], host
+                )
 
     def _spill(self, slots) -> None:
         """Evict the replicas in the given slots: one device->host gather,
@@ -625,18 +854,40 @@ class TMService:
 
     def evict(self, replicas) -> None:
         """Spill the named replicas to the host store. Their staged
-        ingress flushes first (rows land in the snapshot's ring, nothing
-        is lost); any later submit/serve/analysis touching them
-        re-activates transparently."""
+        ingress lands first — scoped to THEIR lanes only via
+        :meth:`BatchRouter.take_lanes` (a K=4096 fleet must not pay a
+        whole-fleet flush to spill a handful of members; other lanes'
+        staged rows stay staged). Any later submit/serve/analysis
+        touching the evicted members re-activates transparently."""
         with self._device_lock:
             if self._res is None:
                 raise ValueError(
                     "service has no residency layer (resident is None)"
                 )
-            self.flush()
-            rids = np.asarray(replicas, dtype=np.int64).reshape(-1)
+            rids = np.unique(
+                np.asarray(replicas, dtype=np.int64).reshape(-1)
+            )
+            with self.router.lock:
+                taken = self.router.take_lanes(rids)
+                if taken is not None:
+                    # taken rows are in flight: credit the mirror at the
+                    # take, debit rejects after the enqueue — same
+                    # accounting as the block-swap flush
+                    self._dev_size[rids] += taken[2]
+            if taken is not None:
+                xs_l, ys_l, cnt_l = taken
+                hot = np.nonzero(cnt_l > 0)[0]
+                self._enqueue_lanes(rids[hot], xs_l[hot], ys_l[hot],
+                                    cnt_l[hot])
             slots = self._res.slot_of[rids]
-            self._spill(np.unique(slots[slots >= 0]))
+            slots = np.unique(slots[slots >= 0])
+            if self._batched:
+                # an explicit evict wants the snapshots durable NOW (the
+                # caller may read svc.ss or save() without another op)
+                self._spill_issue(slots)
+                self._settle_spills()
+            else:
+                self._spill(slots)
 
     def activate(self, replicas) -> np.ndarray:
         """Make the named replicas device-resident (at most ``resident``
@@ -701,6 +952,9 @@ class TMService:
             with self.router.lock:
                 has_rows = self._dev_size > 0
             todo = np.nonzero(has_rows & (budget > 0))[0]
+            # the active-set size is the autotune signal (§17): how many
+            # replicas actually need a slot this round
+            self._res.note_active(len(todo))
             R = self.n_resident
             for i in range(0, len(todo), R):
                 cohort = todo[i:i + R]
@@ -709,6 +963,7 @@ class TMService:
                 budget_p[slots] = budget[cohort]
                 trained_p = self._drain_replicated(budget_p, on_chunk)
                 trained[cohort] = trained_p[slots]
+            self._settle_spills()
             return trained
 
     def _drain_replicated(self, budget, on_chunk) -> np.ndarray:
@@ -1120,12 +1375,14 @@ class TMService:
         return collapse
 
     def _read_bank(self, rid: int) -> np.ndarray:
+        self._settle_spills()
         slot = int(self._res.slot_of[rid])
         if slot >= 0:
             return np.asarray(self._ss.tm.ta_state[slot])
         return np.asarray(self._res.store[rid][0].tm.ta_state)
 
     def _write_bank(self, rid: int, bank) -> None:
+        self._settle_spills()
         slot = int(self._res.slot_of[rid])
         if slot >= 0:
             ta = self._ss.tm.ta_state
@@ -1152,6 +1409,10 @@ class TMService:
         with self._device_lock:
             trained = self.drain(budget, on_chunk)
             self._ps.since += trained
+            if self._auto:
+                target = self._res.autotune_target(granule=self._granule)
+                if target != self.n_resident:
+                    self._repartition(target)
             out = self._maybe_analyze()
             if self.tuner is not None and self.sc.tunable.adapt:
                 # SLO pressure valve (§16): post-drain queue depth is the
@@ -1293,6 +1554,9 @@ class TMService:
         the ``resident`` budget may differ. Anything staged or held now
         is discarded: the checkpoint defines the complete state."""
         with self._device_lock:
+            # settle pending spills BEFORE the install clears the store —
+            # a stale deferred snapshot must never land in the fresh one
+            self._settle_spills()
             while self.router.take_block() is not None:
                 pass  # drop staged rows (pre-restore traffic)
             man = ckpt_mod.read_manifest(directory, step=step)
@@ -1418,6 +1682,27 @@ class TMService:
         for rid in range(R, K):
             res.store[rid] = jax.tree.map(lambda a, _r=rid: a[_r], host)
 
+    def _repartition(self, new_r: int) -> None:
+        """Resize the device plane to ``new_r`` slots (§17
+        auto-residency). The full-K logical fleet assembles host-side, a
+        fresh residency map takes over at the new width, and
+        :meth:`_install_plane` re-lands it — the same machinery that
+        migrates checkpoints across device budgets, which is the proof
+        that partitioning is not logical state: trajectories are
+        bitwise unchanged across re-partitions."""
+        ss_K, keys_K = self._assemble_plane()   # settles pending spills
+        old = self._res
+        self.n_resident = int(new_r)
+        res = res_mod.ResidencyMap(self.n_replicas, self.n_resident)
+        # lifetime counters and the autotune EWMA survive the resize;
+        # the LRU clock and assignment restart deterministically
+        res.activations = old.activations
+        res.evictions = old.evictions
+        res.ewma_active = old.ewma_active
+        self._res = res
+        self.repartitions += 1
+        self._install_plane(ss_K, keys_K)
+
     @classmethod
     def restore(
         cls,
@@ -1466,6 +1751,7 @@ class TMService:
     def steps(self) -> np.ndarray:
         if self._res is None:
             return np.asarray(self._ss.step)
+        self._settle_spills()
         out = np.zeros(self.n_replicas, dtype=np.int32)
         step_p = np.asarray(self._ss.step)
         m = self._res.replica_of >= 0

@@ -22,7 +22,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import tempfile
 from typing import Any, Optional
 
 import jax

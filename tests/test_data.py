@@ -4,7 +4,6 @@ import hashlib
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -169,7 +168,7 @@ def test_mnist_downscale_preserves_label_assignment():
     """Hypothesis property: the 28 -> 14 -> 7 downscale chain is a pure
     datapath-width change — the label sequence depends only on (n, seed),
     and block-pooling a 28x28 raster twice matches the 7x7 geometry."""
-    hyp = pytest.importorskip(
+    pytest.importorskip(
         "hypothesis", reason="optional dev dependency (requirements-dev.txt)"
     )
     from hypothesis import given, settings, strategies as st

@@ -5,8 +5,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as PS
 
 from repro.distributed import autoshard

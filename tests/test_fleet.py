@@ -230,7 +230,6 @@ def test_fleet_adapt_manager_per_replica_rollback():
     )
     base = m.offline_train(xs[:80], ys[:80], n_epochs=10)
     assert base.shape == (K,)
-    good_ta = np.asarray(m.fleet.ss.tm.ta_state).copy()
 
     # Poison replica 0's TA bank (simulate corruption / bad adaptation):
     # next analysis must roll ONLY replica 0 back to its known-good bank.

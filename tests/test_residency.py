@@ -44,11 +44,12 @@ def _cfg(backend="ref"):
 
 
 def _service(resident=None, *, packed=False, backend="ref", seed=7,
-             with_eval=True, analyze_every=8):
+             with_eval=True, analyze_every=8, batched=True):
     cfg = _cfg(backend)
     sc = ServiceConfig(
         replicas=K, buffer_capacity=CAP, chunk=CHUNK, ingress_block=BLOCK,
         packed=packed, s=3.0, T=15, seed=seed, resident=resident,
+        batched_moves=batched,
         policy=AdaptPolicy(analyze_every=analyze_every,
                            rollback_threshold=0.1),
     )
@@ -254,6 +255,110 @@ def test_sharded_residency_matches_unsharded_twin():
             twin.tick(np.where(mask, twin.chunk, 0))
     assert res._res.evictions > 0
     _assert_same_state(twin, res)
+
+
+# ---------------------------------------------------------------------------
+# Batched moves (§17): multi-cohort superblocks, scoped evict, auto slots
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("packed", [False, True])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_multicohort_batched_matches_sync_oracle(backend, packed):
+    """EVERY lane hot on 2 slots (hot-lane count = 3x resident, so each
+    flush and each drain sweep runs 3 cohorts through the coalesced
+    superblock path): the batched datapath — fused activate+enqueue,
+    deferred spill settlement — lands bitwise on PR 8's synchronous
+    per-cohort oracle AND on the always-resident twin."""
+    batched = _service(2, packed=packed, backend=backend)
+    oracle = _service(2, packed=packed, backend=backend, batched=False)
+    twin = _service(None, packed=packed, backend=backend)
+    assert batched._batched and not oracle._batched
+    r = np.random.default_rng(11)
+    for i in range(10):
+        for _ in range(2):   # all K lanes hot every round
+            x, y = r.random(F) > 0.5, int(r.integers(0, 3))
+            for svc in (batched, oracle, twin):
+                svc.submit_rows(x, y)
+        for svc in (batched, oracle, twin):
+            svc.tick(2)
+    assert batched._res.evictions > 10, "slots were never contended"
+    _assert_same_state(oracle, batched, "batched diverged from oracle")
+    _assert_same_state(twin, batched, "batched diverged from twin")
+
+
+def test_scoped_evict_leaves_other_lanes_staged():
+    """evict() lands ONLY the named replicas' staged rows (take_lanes),
+    not the whole fleet's: other lanes stay staged (no block swap, no
+    flush dispatch), and the evicted member's rows are in its spilled
+    ring — nothing lost, nothing reordered."""
+    svc = _service(2, with_eval=False)
+    r = np.random.default_rng(2)
+    for _ in range(3):
+        svc.submit_rows(r.random(F) > 0.5, int(r.integers(0, 3)))
+    staged_before = svc.router.staged
+    assert (staged_before == 3).all()
+    buffered_before = svc.buffered.copy()
+    flushes_before = svc.router.flushes
+    svc.evict([1])
+    assert not svc.resident[1]
+    staged = svc.router.staged
+    assert staged[1] == 0, "the evicted lane must land before the spill"
+    np.testing.assert_array_equal(
+        staged[[0, 2, 3, 4, 5]], staged_before[[0, 2, 3, 4, 5]]
+    )
+    assert svc.router.flushes == flushes_before, "scoped path swapped a block"
+    np.testing.assert_array_equal(svc.buffered, buffered_before)
+    # the landed rows really are in the spilled snapshot's ring
+    assert int(np.asarray(svc.ss.buf.size)[1]) == 3
+
+
+def test_auto_resident_grow_shrink_trajectory():
+    """resident='auto': dense traffic grows the plane (the EWMA active
+    set no longer fits), sparse traffic shrinks it back through the
+    hysteresis band — and the trajectory stays bitwise equal to the
+    always-resident twin across every re-partition."""
+    auto = _service("auto")
+    twin = _service(None)
+    assert auto.n_resident == 2        # ceil(K / 4) initial slots
+    r = np.random.default_rng(23)
+
+    def step(n_lanes):
+        mask = np.zeros(K, dtype=bool)
+        mask[:n_lanes] = True
+        x, y = r.random(F) > 0.5, int(r.integers(0, 3))
+        auto.submit_rows(x, y, mask)
+        twin.submit_rows(x, y, mask)
+        auto.flush()
+        drive = auto.buffered > 0
+        auto.tick()
+        twin.tick(np.where(drive, twin.chunk, 0))
+
+    for _ in range(8):
+        step(K)                        # dense: every lane active
+    grown = auto.n_resident
+    assert grown > 2, "dense traffic never grew the plane"
+    for _ in range(12):
+        step(1)                        # sparse: one active lane
+    assert auto.n_resident < grown, "sparse traffic never shrank the plane"
+    assert auto.repartitions >= 2
+    _assert_same_state(twin, auto, "trajectory changed across re-partitions")
+
+
+def test_auto_resident_save_restore_continuation_bitwise(tmp_path):
+    """save -> restore -> continue stays bitwise under resident='auto':
+    the checkpoint is residency-agnostic, the restored service re-sizes
+    on its own traffic, and neither side's trajectory moves."""
+    svc = _service("auto")
+    _drive(svc, 20, seed=5)
+    svc.save(str(tmp_path))
+    svc.load(str(tmp_path))
+    other = TMService.restore(str(tmp_path), eval_x=EVAL_X, eval_y=EVAL_Y)
+    assert other.sc.resident == "auto" and other._auto
+    _assert_same_state(svc, other, "restore changed state")
+    _drive(svc, 30, seed=11)
+    _drive(other, 30, seed=11)
+    _assert_same_state(svc, other, "post-restore trajectories diverged")
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import TMConfig, init_runtime, init_state
+from repro.core import TMConfig, init_state
 from repro.serve import AdaptPolicy, ServiceConfig, TMService
 
 try:
@@ -253,6 +253,34 @@ def test_take_block_returns_stable_double_buffered_arrays():
     xs2, _, counts2 = r.take_block()
     np.testing.assert_array_equal(counts2, [3] * K)
     assert _uid(xs2[0, 0]) == 7 and _uid(xs2[0, 2]) == 9
+
+
+def test_take_lanes_scopes_to_named_replicas():
+    """take_lanes pulls ONLY the named lanes (the scoped-flush path for
+    TMService.evict): other lanes stay staged, no block swap happens,
+    and the taken rows come out in submission order."""
+    from repro.serve.router import BatchRouter
+
+    r = BatchRouter(K, F, capacity=CAP, block=BLOCK)
+    dev = np.zeros(K, dtype=np.int64)
+    full = np.ones(K, dtype=bool)
+    for uid in (1, 2):
+        x, y = _row(uid)
+        acc, _ = r.stage_rows(np.broadcast_to(x, (K, F)),
+                              np.full(K, y), full, dev)
+        assert acc.all()
+    taken = r.take_lanes([2, 0])
+    assert taken is not None
+    xs, ys, counts = taken
+    np.testing.assert_array_equal(counts, [2, 2])
+    for lane in range(2):
+        assert [_uid(xs[lane, c]) for c in range(2)] == [1, 2]
+    np.testing.assert_array_equal(r.staged, [0, 2, 0])   # lane 1 untouched
+    assert r.flushes == 0                                # no block swap
+    assert r.take_lanes([0, 2]) is None                  # now empty
+    xs2, _, counts2 = r.take_block()                     # lane 1 still there
+    np.testing.assert_array_equal(counts2, [0, 2, 0])
+    assert _uid(xs2[1, 0]) == 1
 
 
 if HAVE_HYPOTHESIS:

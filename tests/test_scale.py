@@ -12,7 +12,6 @@ tier-1) and the full 28x28 (f=784, ``-m slow``) through
 """
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -9,7 +9,6 @@ not tolerance noise.
 """
 import tempfile
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
